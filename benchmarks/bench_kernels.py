@@ -1,0 +1,31 @@
+"""Kernel-level benchmark: matmul-FFT backends vs XLA-native FFT (per-call
+time for batched 1D FFT — the paper's FFTW-backend comparison at the level
+where the MXU argument lives).  Derived column reports flops and the
+achieved fraction of the CPU-local roofline."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import algo, plan
+
+from .common import emit, time_fn
+
+
+def run(n: int = 4096, batch: int = 64) -> None:
+    rng = np.random.default_rng(0)
+    x = (jax.numpy.asarray(rng.standard_normal((batch, n)), jax.numpy.float32),
+         jax.numpy.asarray(rng.standard_normal((batch, n)), jax.numpy.float32))
+    for backend in ("jnp", "jnp_karatsuba", "xla_native"):
+        planner = plan.Planner(mode="estimate", backends=(backend,))
+        pl = planner.plan(n, "c2c", batch=batch)
+        fn = jax.jit(lambda a, _p=pl: plan.execute(_p, a))
+        t = time_fn(fn, x)
+        emit(f"kernels/fft1d/{backend}/n{n}b{batch}", t,
+             f"gflops={pl.flops(batch) / 1e9:.2f};"
+             f"achieved_gflops_per_s={pl.flops(batch) / t / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Benchmark utilities: median-of-k timing (paper: median of 50; scaled to
+CPU), CSV output `name,us_per_call,derived`."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, reps: int = 7, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call (compiled, steady-state)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

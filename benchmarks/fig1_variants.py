@@ -1,0 +1,45 @@
+"""Paper Fig. 1: strong-scaling runtimes of the implementation variants.
+
+On this container "scaling" is over problem size rather than cores (1 CPU
+core); the *ordering* of the variants is the paper's claim under test:
+bulk-synchronous (for_loop) <= sync <= opt < naive, with agas slowest.
+Also reproduces the paper's task-size study (task granularity vs overhead).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import plan, variants
+
+from .common import emit, time_fn
+
+
+def run(sizes=(256, 512, 1024), task_size: int = 8) -> None:
+    planner = plan.Planner(mode="estimate", backends=("jnp",))
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        x = jax.numpy.asarray(rng.standard_normal((n, n)), jax.numpy.float32)
+        base = None
+        for name in ("for_loop", "future_sync", "future_opt", "future_naive",
+                     "future_agas", "strided"):
+            fn = jax.jit(lambda a, _n=name: variants.run_variant(
+                _n, a, planner, task_size=task_size))
+            t = time_fn(fn, x)
+            if name == "for_loop":
+                base = t
+            emit(f"fig1/{name}/n{n}", t, f"rel_to_for_loop={t / base:.2f}")
+
+    # task-size sweep (the paper's 'adjustable task size' insight)
+    n = 512
+    x = jax.numpy.asarray(rng.standard_normal((n, n)), jax.numpy.float32)
+    for ts in (1, 2, 4, 8, 16, 64, 256):
+        fn = jax.jit(lambda a, _t=ts: variants.run_variant(
+            "future_naive", a, planner, task_size=_t))
+        t = time_fn(fn, x)
+        emit(f"fig1/task_size/{ts}", t, f"rows_per_task={ts}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 2: runtime decomposition per algorithmic step
+(fft1 / transpose / fft2 / transpose-back) for the synchronized variants."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import plan, variants
+
+from .common import emit, time_fn
+
+
+def run(n: int = 512) -> None:
+    planner = plan.Planner(mode="estimate", backends=("jnp",))
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.standard_normal((n, n)), jax.numpy.float32)
+
+    stages = variants.staged_for_loop(x, planner)
+    val = x
+    total = 0.0
+    for name, fn in stages:
+        t = time_fn(fn, val)
+        val = fn(val)
+        total += t
+        emit(f"fig2/staged/{name}/n{n}", t)
+    emit(f"fig2/staged/total/n{n}", total)
+
+    fused = jax.jit(lambda a: variants.run_variant("for_loop", a, planner))
+    t_fused = time_fn(fused, x)
+    emit(f"fig2/fused_for_loop/n{n}", t_fused,
+         f"stage_sum_over_fused={total / t_fused:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figs. 3/4: execution time per backend under estimated vs measured
+planning.  Backends: our matmul-FFT ('jnp'), its Karatsuba variant, and the
+XLA-native FFT ('xla_native' — the FFTW-class library baseline)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import plan, variants
+
+from .common import emit, time_fn
+
+BACKENDS = ("jnp", "jnp_karatsuba", "xla_native")
+
+
+def run(n: int = 512) -> None:
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.standard_normal((n, n)), jax.numpy.float32)
+    for mode in ("estimate", "measured"):
+        for backend in BACKENDS:
+            planner = plan.Planner(mode=mode, backends=(backend,),
+                                   hardware=plan.CPU_LOCAL)
+            fn = jax.jit(lambda a: variants.run_variant("for_loop", a, planner))
+            t = time_fn(fn, x)
+            row = planner.plan(n, "c2c")
+            emit(f"fig3/{mode}/{backend}/n{n}", t,
+                 f"factors={'x'.join(map(str, row.factors)) or 'native'}")
+
+
+if __name__ == "__main__":
+    run()

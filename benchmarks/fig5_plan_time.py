@@ -1,0 +1,28 @@
+"""Paper Fig. 5: planning time — estimated plans are ~free, measured plans
+cost orders of magnitude more (FFTW's >50x planning-time gap)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan
+
+from .common import emit
+
+
+def run(sizes=(256, 1024, 4096)) -> None:
+    for n in sizes:
+        for mode in ("estimate", "measured"):
+            planner = plan.Planner(mode=mode,
+                                   backends=("jnp", "jnp_karatsuba",
+                                             "xla_native"),
+                                   hardware=plan.CPU_LOCAL)
+            planner.plan(n, "c2c", batch=32)
+            emit(f"fig5/{mode}/n{n}", planner.last_plan_seconds)
+        # wisdom hit cost
+        planner.plan(n, "c2c", batch=32)
+        emit(f"fig5/wisdom_hit/n{n}", planner.last_plan_seconds)
+
+
+if __name__ == "__main__":
+    run()

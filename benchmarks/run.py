@@ -1,0 +1,22 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_kernels, fig1_variants, fig2_decomposition,
+                   fig3_planning, fig5_plan_time, fig6_distributed)
+    fig1_variants.run()
+    fig2_decomposition.run()
+    fig3_planning.run()
+    fig5_plan_time.run()
+    fig6_distributed.run()
+    bench_kernels.run()
+
+
+if __name__ == "__main__":
+    main()

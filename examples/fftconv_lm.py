@@ -1,0 +1,51 @@
+"""The paper's technique inside the LM stack: train a small Hyena-style LM
+whose sequence mixer is the repro.core FFT convolution, and verify its decode
+path (history-cache direct convolution) matches training-mode outputs.
+
+    PYTHONPATH=src python examples/fftconv_lm.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main() -> None:
+    arch = ArchConfig(
+        name="fftconv-lm", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=4096,
+        segments=(("fftconv_mlp", 4),), fftconv_rank=16,
+        compute_dtype="float32")
+    shape = ShapeConfig("train", 128, 8, "train")
+    trainer = Trainer(arch, shape, None,
+                      TrainerConfig(ckpt_dir="/tmp/repro_fftconv",
+                                    ckpt_every=50),
+                      AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60))
+    params, _, hist = trainer.run(30)
+    print(f"fftconv-LM: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+    # decode == forward consistency (FFT conv train path vs history-cache
+    # direct conv decode path)
+    toks = jax.random.randint(jax.random.key(0), (2, 16), 0, arch.vocab_size)
+    logits_full, _ = lm.forward(params, arch, {"tokens": toks})
+    cache = lm.init_cache(arch, 2, 16)
+    outs = []
+    for t in range(16):
+        lg, cache = lm.decode_step(params, arch, cache,
+                                   {"tokens": toks[:, t:t + 1]})
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(logits_full.astype(jnp.float32)
+                                - jnp.concatenate(outs, 1))))
+    print(f"decode-vs-forward max |delta logits| = {err:.2e}")
+    assert err < 2e-2
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end training driver: a ~100M-parameter granite-family model,
+synthetic data, full fault-tolerant runtime (async checkpoints, restart).
+
+The default (--scale small, ~20M params, 100 steps) finishes on this CPU
+container in a few minutes; --scale 100m is the full-size run for real
+hardware (same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def build_arch(scale: str):
+    base = get_config("granite_8b")
+    if scale == "100m":
+        return dataclasses.replace(
+            base, name="granite-100m", num_layers=8, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32768)
+    return dataclasses.replace(
+        base, name="granite-20m", num_layers=4, d_model=384, num_heads=6,
+        num_kv_heads=2, d_ff=1024, vocab_size=8192)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "100m"], default="small")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    arch = build_arch(args.scale)
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    trainer = Trainer(
+        arch, shape, mesh=None,
+        tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25),
+        ocfg=AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 1),
+                         total_steps=args.steps))
+    from repro.models.params import param_count
+    from repro.models import lm
+    print(f"arch={arch.name} params={param_count(lm.model_meta(arch)) / 1e6:.1f}M")
+    _, _, hist = trainer.run(args.steps)
+    print(f"step 0 loss={hist[0]['loss']:.4f} -> "
+          f"step {len(hist) - 1} loss={hist[-1]['loss']:.4f}")
+    print(f"checkpoints: {trainer.ckpt.all_steps()} (async, atomic, keep-3)")
+    print(f"straggler events: {len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the per-cell
+JSON records emitted by repro.launch.dryrun.
+
+    python experiments/make_tables.py experiments/dryrun > experiments/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["granite_8b", "olmo_1b", "command_r_plus_104b", "granite_3_2b",
+              "phi35_moe_42b", "dbrx_132b", "xlstm_1_3b", "zamba2_7b",
+              "qwen2_vl_7b", "musicgen_large"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def improvement_hint(r):
+    b = r["bottleneck"]
+    kind = r["kind"]
+    ar = (r.get("collective_bytes_per_device") or {}).get("all-reduce", 0)
+    if kind == "train" and ar > 1e10:
+        return ("f32 TP activation all-reduces dominate the wire (2/layer "
+                "x fwd+remat+bwd); bf16 reductions + sequence-parallel "
+                "reduce-scatter halve it; remat policy trims HBM bytes")
+    if b == "memory" and kind == "decode":
+        return ("weight+cache streaming bound (classic decode); bf16/int8 "
+                "weights, bf16-kept attention (no f32 cache copies), more "
+                "batch per chip raise arithmetic intensity")
+    if b == "memory":
+        return ("activation streaming bound (XLA operand-bytes upper "
+                "bound); fusion-friendly bulk stages, bf16 reductions")
+    if b == "collective":
+        return ("collective-dominated; bf16 partial-sum reductions, "
+                "replicated MoE combine buffer, chunked overlap "
+                "(LCI-analogue) cut exposed time")
+    return "compute-bound; near roofline if MXU utilization holds"
+
+
+def load(dir_):
+    recs = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(f))
+        if not isinstance(r, dict) or "arch" not in r:
+            continue                      # evidence files etc.
+        key = (r["arch"], r["shape"],
+               "multi" if r["mesh"].startswith("2x") else "single",
+               "pipeline" if "pipeline" in os.path.basename(f) else "flat")
+        recs[key] = r
+    return recs
+
+
+def main(dir_):
+    recs = load(dir_)
+
+    print("### Dry-run summary (single pod 16x16 = 256 chips; "
+          "multi-pod 2x16x16 = 512 chips)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | compile(s/m) | "
+          "args bytes/dev | temp bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "single", "flat"))
+            r2 = recs.get((a, s, "multi", "flat"))
+            if r1 is None and r2 is None:
+                continue
+
+            def st(r):
+                if r is None:
+                    return "(pending)"
+                return {"ok": "ok", "skip": "skip*", "error": "ERROR"}[r["status"]]
+            mem = (r1 or {}).get("memory") or {}
+            arg_b = mem.get("argument_bytes")
+            tmp_b = mem.get("temp_bytes")
+            comp = (f"{(r1 or {}).get('compile_seconds', '-')}/"
+                    f"{(r2 or {}).get('compile_seconds', '-')}")
+            print(f"| {a} | {s} | {st(r1)} | {st(r2)} | {comp} | "
+                  f"{fmt_b(arg_b)} | {fmt_b(tmp_b)} |")
+    print("\n`skip*` = documented long_500k skip for pure full-attention "
+          "archs (DESIGN.md §Arch-applicability).\n")
+
+    print("### Roofline (single-pod 16x16, per chip: 197 TF bf16, "
+          "819 GB/s HBM, 50 GB/s link)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | "
+          "bottleneck | MODEL/HLO flops | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "single", "flat"))
+            if r is None or r["status"] != "ok":
+                continue
+            print(f"| {a} | {s} | {fmt_s(r['t_compute'])} | "
+                  f"{fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} | "
+                  f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+                  f"{improvement_hint(r)} |")
+
+    print("\n### Collective traffic detail (per device, single-pod)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+          "all-to-all | permute | wire total |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "single", "flat"))
+            if r is None or r["status"] != "ok":
+                continue
+            c = r["collective_bytes_per_device"]
+            w = r.get("collective_wire_bytes_per_device", {})
+            print(f"| {a} | {s} | {fmt_b(c['all-gather'])} | "
+                  f"{fmt_b(c['all-reduce'])} | {fmt_b(c['reduce-scatter'])} | "
+                  f"{fmt_b(c['all-to-all'])} | "
+                  f"{fmt_b(c['collective-permute'])} | "
+                  f"{fmt_b(sum(w.values()) if w else None)} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

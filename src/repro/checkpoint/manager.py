@@ -1,0 +1,139 @@
+"""Fault-tolerant checkpointing: async, atomic, mesh-agnostic.
+
+Design points for 1000-node operation (scaled to this container):
+
+* **Atomic**: write to ``step_XXXX.tmp`` then ``os.replace`` — a crash
+  mid-save never corrupts the latest checkpoint.
+* **Async**: device->host transfer happens synchronously (cheap), the disk
+  write runs on a background thread so the train loop is not blocked (the
+  paper's async-task lesson applied where it *does* pay: I/O, not compute).
+* **Mesh-agnostic (elastic)**: arrays are saved logically (full global
+  value); ``restore`` device_puts onto whatever sharding the *new* mesh
+  prescribes.  Restarting 512-chip training on 256 chips is a restore with
+  different rules — tested in tests/test_runtime.py.  (On a real multi-host
+  pod each host saves its addressable shards + a manifest; the logical-save
+  path here is the single-process specialization.)
+* **keep_n** garbage collection, "latest" pointer file, data-iterator step
+  and RNG captured alongside arrays.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.save_seconds = 0.0
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        t0 = time.perf_counter()
+        flat, _ = _flatten_with_paths(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        self.wait()                                             # one in flight
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+        self.save_seconds = time.perf_counter() - t0
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               extra: Dict[str, Any]) -> None:
+        path = os.path.join(self.dir, f"step_{step:08d}.npz")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k.replace("/", "\x1f"): v for k, v in host.items()})
+        os.replace(tmp, path)
+        man = {"step": step, "extra": extra,
+               "keys": sorted(host.keys()),
+               "time": time.time()}
+        mtmp = path + ".json.tmp"
+        with open(mtmp, "w") as f:
+            json.dump(man, f)
+        os.replace(mtmp, path + ".json")
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "latest.tmp"),
+                   os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n]:
+            for suffix in (".npz", ".npz.json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"step_{s:08d}{suffix}"))
+                except OSError:
+                    pass
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("step_") and f.endswith(".npz"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "latest")
+        if os.path.exists(p):
+            with open(p) as f:
+                s = int(f.read().strip())
+            if os.path.exists(os.path.join(self.dir, f"step_{s:08d}.npz")):
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None):
+        """Restore onto the structure of ``like``; optional sharding tree
+        (same structure) re-shards for the current mesh (elastic restart)."""
+        path = os.path.join(self.dir, f"step_{step:08d}.npz")
+        data = np.load(path)
+        flat_like, treedef = _flatten_with_paths(like)
+        flat_sh = None
+        if shardings is not None:
+            flat_sh, _ = _flatten_with_paths(shardings)
+        out = {}
+        for k in flat_like:
+            arr = data[k.replace("/", "\x1f")]
+            if flat_sh is not None:
+                out[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                out[k] = jax.numpy.asarray(arr)
+        leaves = [out[k] for k in flat_like]
+        with open(path + ".json") as f:
+            man = json.load(f)
+        return jax.tree_util.tree_unflatten(treedef, leaves), man["extra"]

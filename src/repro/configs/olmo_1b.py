@@ -1,0 +1,18 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304
+— non-parametric LN [arXiv:2402.00838; hf]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmo-1b", family="dense",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=50304,
+    rope="standard", norm="nonparam_ln", mlp_act="silu",
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=512, compute_dtype="float32")

@@ -1,0 +1,312 @@
+"""Distributed multidimensional FFT on a device mesh (the paper's §3.2/§5.3).
+
+Slab decomposition over one mesh axis, pencil decomposition over two.  All
+data movement is EXPLICIT collectives inside ``shard_map`` — the paper's
+central design decision ("relying on the implicit communication HPX allows
+with AGAS does not make sense; instead we use the HPX equivalents of the MPI
+collective operations").
+
+Communication backends (paper §5.3, Fig. 6):
+
+* ``collective`` — one monolithic ``jax.lax.all_to_all`` per redistribution
+  (HPX collectives over the MPI parcelport; XLA's stock schedule).
+* ``pipelined`` — the redistribution is split into ``chunks`` column groups;
+  chunk c's all_to_all is issued while chunk c+1's row-FFT computes, a
+  software pipeline that hides ICI latency behind MXU work.  This is the
+  TPU-native analogue of the LCI parcelport's 4-5x communication speedup:
+  same bytes, less *exposed* time.
+* ``agas`` — all-gather-then-slice: every locality materializes the full
+  matrix and takes its slice, emulating the redundant data movement of
+  implicit AGAS addressing.  Implemented to *measure* the overhead the paper
+  plots (Fig. 1, dark blue), not to be used.
+
+Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
+
+  1. local r2c FFTs along contiguous rows          (N/P, Mh)
+  2. COMMUNICATE: all_to_all column slabs          -> (N, Mh/P)  [rearrange
+     = split into N_locs parts + concat, fused into the tiled collective]
+  3. transpose AFTER communication (paper's choice) -> (Mh/P, N)
+  4. local c2c FFTs along (now contiguous) columns
+  5. COMMUNICATE back + rearrange to original layout (N/P, Mh)
+
+The transform matches ``numpy.fft.rfft2`` zero-padded to the padded column
+count; ``Mh`` is padded to a multiple of P for collective divisibility and
+cropped by the caller-facing wrappers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import algo
+from .plan import Plan, Planner, execute
+
+Complex = algo.Complex
+
+COMM_BACKENDS = ("collective", "pipelined", "agas")
+
+
+def padded_half(m: int, p: int) -> int:
+    """Column count after r2c (m//2+1) padded up to a multiple of p."""
+    mh = m // 2 + 1
+    return ((mh + p - 1) // p) * p
+
+
+# ---------------------------------------------------------------------------
+# local building blocks (run per-device inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _local_rows_rfft(x: jax.Array, plan: Plan, mh_pad: int) -> Complex:
+    """r2c FFT along rows + zero-pad columns to the collective-divisible width."""
+    re, im = execute(plan, x)
+    pad = mh_pad - re.shape[-1]
+    if pad:
+        re = jnp.pad(re, ((0, 0), (0, pad)))
+        im = jnp.pad(im, ((0, 0), (0, pad)))
+    return re, im
+
+
+def _a2a(c: Complex, axis_name: str, split: int, concat: int) -> Complex:
+    f = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                          split_axis=split, concat_axis=concat, tiled=True)
+    return f(c[0]), f(c[1])
+
+
+# ---------------------------------------------------------------------------
+# slab-decomposed 2D r2c FFT
+# ---------------------------------------------------------------------------
+
+
+def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
+              planner: Optional[Planner] = None,
+              comm: str = "collective", chunks: int = 4,
+              keep_transposed: bool = False,
+              permuted_cols: bool = False):
+    """Distributed 2D r2c FFT.
+
+    x: real (N, M), sharded (P(axis), None).  Returns (re, im) of shape
+    (N, mh_pad) sharded the same way (crop to M//2+1 for the exact rfft2),
+    or (mh_pad, N) sharded over rows if ``keep_transposed`` (saves the whole
+    second communication step when the consumer accepts transposed layout —
+    e.g. convolution pipelines that come straight back).
+
+    ``permuted_cols`` skips the column FFT's digit transpose (output columns
+    arrive in four-step permuted frequency order — valid for pointwise
+    spectral consumers; pair with ``ifft2_slab(..., permuted_cols=True)``).
+    One fewer memory pass per column transform.
+    """
+    planner = planner or Planner(backends=("jnp",))
+    n, m = x.shape
+    p = mesh.shape[axis]
+    mh_pad = padded_half(m, p)
+    row_plan = planner.plan(m, kind="r2c")
+    col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
+
+    def local(xl: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        y = _local_rows_rfft(xl, row_plan, mh_pad)              # (n/p, mh_pad)
+        if comm == "collective":
+            y = _a2a(y, axis, split=1, concat=0)                # (n, mh_pad/p)
+        elif comm == "pipelined":
+            y = _pipelined_exchange(y, axis, p, chunks)
+        elif comm == "agas":
+            y = _agas_exchange(y, axis, p)
+        else:
+            raise ValueError(f"comm backend {comm!r}; options {COMM_BACKENDS}")
+        # transpose AFTER communication (paper §3.2): write-contiguous rows
+        yt = (y[0].T, y[1].T)                                   # (mh_pad/p, n)
+        z = execute(col_plan, yt)                               # column FFTs
+        if keep_transposed:
+            return z
+        zt = (z[0].T, z[1].T)                                   # (n, mh_pad/p)
+        return _a2a(zt, axis, split=0, concat=1)                # (n/p, mh_pad)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=P(axis, None),
+        out_specs=(P(None, axis) if keep_transposed else P(axis, None)),
+    )(x)
+
+
+def ifft2_slab(c: Complex, mesh: jax.sharding.Mesh, axis: str, m: int,
+               planner: Optional[Planner] = None, comm: str = "collective",
+               from_transposed: bool = False,
+               permuted_cols: bool = False) -> jax.Array:
+    """Inverse of :func:`fft2_slab` back to a real (N, M) array."""
+    planner = planner or Planner(backends=("jnp",))
+    n = c[0].shape[1] if from_transposed else c[0].shape[0]
+    p = mesh.shape[axis]
+    mh = m // 2 + 1
+    mh_pad = padded_half(m, p)
+    col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
+    row_plan = planner.plan(m, kind="c2r")
+
+    def local(cr: jax.Array, ci: jax.Array) -> jax.Array:
+        z = (cr, ci)
+        if not from_transposed:                                 # (n/p, mh_pad)
+            z = _a2a(z, axis, split=1, concat=0)                # (n, mh_pad/p)
+            z = (z[0].T, z[1].T)                                # (mh_pad/p, n)
+        if permuted_cols:
+            zi = algo.ifft_from_permuted((z[0], z[1]),
+                                         factors=col_plan.factors,
+                                         karatsuba=col_plan.karatsuba)
+        else:
+            zi = algo.ifft((z[0], z[1]), factors=col_plan.factors or None,
+                           karatsuba=col_plan.karatsuba)        # inverse cols
+        zt = (zi[0].T, zi[1].T)                                 # (n, mh_pad/p)
+        y = _a2a(zt, axis, split=0, concat=1)                   # (n/p, mh_pad)
+        y = (y[0][:, :mh], y[1][:, :mh])                        # crop padding
+        return execute(row_plan, y)                             # c2r rows
+
+    in_spec = P(None, axis) if from_transposed else P(axis, None)
+    return jax.shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
+                         out_specs=P(axis, None))(c[0], c[1])
+
+
+# ---------------------------------------------------------------------------
+# communication backends
+# ---------------------------------------------------------------------------
+
+
+def _pipelined_exchange(y: Complex, axis: str, p: int, chunks: int) -> Complex:
+    """Chunked all_to_all pipeline (the LCI-parcelport analogue).
+
+    Each device's DESTINATION column block [d*W, (d+1)*W) (W = mh_pad/p) is
+    split into ``chunks`` sub-blocks; sub-block c of every destination is
+    exchanged by its own all_to_all, so the concatenation of the received
+    chunks reproduces the monolithic layout exactly.  XLA emits independent
+    all-to-all-start/done pairs, so on hardware chunk c's transfer overlaps
+    chunk c+1's residual compute; bytes on the wire are identical to the
+    monolithic collective, but the exposed communication time shrinks.
+    """
+    rloc, mh_pad = y[0].shape
+    w_dest = mh_pad // p
+    chunks = max(1, min(chunks, w_dest))
+    while w_dest % chunks:
+        chunks -= 1
+    wc = w_dest // chunks
+
+    y3 = (y[0].reshape(rloc, p, w_dest), y[1].reshape(rloc, p, w_dest))
+    outs = []
+    for c in range(chunks):
+        piece = (jax.lax.dynamic_slice_in_dim(y3[0], c * wc, wc, 2)
+                 .reshape(rloc, p * wc),
+                 jax.lax.dynamic_slice_in_dim(y3[1], c * wc, wc, 2)
+                 .reshape(rloc, p * wc))
+        outs.append(_a2a(piece, axis, split=1, concat=0))       # (n, wc)
+    re = jnp.concatenate([o[0] for o in outs], axis=1)
+    im = jnp.concatenate([o[1] for o in outs], axis=1)
+    return re, im
+
+
+def _agas_exchange(y: Complex, axis: str, p: int) -> Complex:
+    """AGAS emulation: implicit addressing = replicate-then-slice.
+
+    Every locality gathers the FULL matrix (p x the necessary bytes) and then
+    resolves its slice through a global index — the redundant data movement
+    the paper measures for the AGAS variant.
+    """
+    re = jax.lax.all_gather(y[0], axis, axis=0, tiled=True)     # (n, mh_pad)
+    im = jax.lax.all_gather(y[1], axis, axis=0, tiled=True)
+    i = jax.lax.axis_index(axis)
+    w = re.shape[1] // p
+    return (jax.lax.dynamic_slice_in_dim(re, i * w, w, 1),
+            jax.lax.dynamic_slice_in_dim(im, i * w, w, 1))
+
+
+# ---------------------------------------------------------------------------
+# distribute / collect (the paper's `scatter` collective setup step)
+# ---------------------------------------------------------------------------
+
+
+def distribute(x: jax.Array, mesh: jax.sharding.Mesh, axis: str) -> jax.Array:
+    """Scatter a host/global matrix into row slabs over ``axis`` (the paper's
+    hpx scatter collective before the FFT)."""
+    from jax.sharding import NamedSharding
+    return jax.device_put(x, NamedSharding(mesh, P(axis, None)))
+
+
+def collect(x: jax.Array) -> np.ndarray:
+    """Gather slabs back to a single host array (paper: gather/concat)."""
+    return np.asarray(jax.device_get(x))
+
+
+# ---------------------------------------------------------------------------
+# communication-aware planning (FFTW-style planning applied to the paper's
+# parcelport choice: pick the comm backend from the roofline model)
+# ---------------------------------------------------------------------------
+
+
+def plan_comm(n: int, m: int, p: int, hw=None,
+              overlap_capable: bool = True) -> str:
+    """Choose the communication backend for an (n x m) slab FFT on p chips.
+
+    Cost model (per device, per exchange):
+      collective: wire = 2 * (p-1)/p * slab_bytes           (two all_to_alls)
+      pipelined:  same wire, exposed time ~ 1/chunks, but adds one slab
+                  read+write of HBM traffic for the chunk copies
+      agas:       wire = 2 * (p-1) * slab_bytes              (never chosen)
+    The monolithic collective wins when the exchange is small relative to
+    compute (it fuses best); pipelining wins when exposed-comm would exceed
+    ~20% of the local FFT compute time and overlap hardware exists.
+    """
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    mh_pad = padded_half(m, p)
+    slab_bytes = (n / p) * mh_pad * 8.0
+    wire = 2.0 * (p - 1) / p * slab_bytes
+    t_comm = wire / hw.link_bw
+    # local compute: four-step matmul flops for rows + cols
+    from .algo import default_factorization
+    flops = 8.0 * (n / p) * mh_pad * (sum(default_factorization(m // 2))
+                                      + sum(default_factorization(n)))
+    t_comp = flops / hw.flops
+    if overlap_capable and t_comm > 0.2 * t_comp:
+        return "pipelined"
+    return "collective"
+
+
+# ---------------------------------------------------------------------------
+# pencil-decomposed 3D c2c FFT (P3DFFT-style, 2D mesh)
+# ---------------------------------------------------------------------------
+
+
+def fft3_pencil(x: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                planner: Optional[Planner] = None) -> Complex:
+    """3D c2c FFT of (X, Y, Z) sharded (P(ax0), P(ax1), None).
+
+    Pencil decomposition: Z-FFT local; all_to_all over ``axes[1]`` swaps Y
+    in; Y-FFT; all_to_all over ``axes[0]`` swaps X in; X-FFT.  Communication
+    stays within row/column communicators — the P3DFFT advantage the paper
+    cites over slab decomposition.  Output sharded (None, P(ax0), P(ax1))
+    over (X -> local, Y, Z).
+    """
+    planner = planner or Planner(backends=("jnp",))
+    nx, ny, nz = x[0].shape
+    plan_z = planner.plan(nz, kind="c2c")
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+    ax0, ax1 = axes
+
+    def local(cr: jax.Array, ci: jax.Array) -> Complex:
+        z = execute(plan_z, (cr, ci))                           # FFT along Z
+        # bring Y local: exchange Z<->Y within the ax1 communicator
+        z = _a2a(z, ax1, split=2, concat=1)                     # (x/p0, y, z/p1)
+        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
+        zy = execute(plan_y, zt)                                # FFT along Y
+        zy = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
+        # bring X local: exchange Y<->X within the ax0 communicator
+        zy = _a2a(zy, ax0, split=1, concat=0)                   # (x, y/p0, z/p1)
+        zx = (jnp.moveaxis(zy[0], 0, -1), jnp.moveaxis(zy[1], 0, -1))
+        zz = execute(plan_x, zx)                                # FFT along X
+        return jnp.moveaxis(zz[0], -1, 0), jnp.moveaxis(zz[1], -1, 0)
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(P(ax0, ax1, None), P(ax0, ax1, None)),
+                         out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x[0], x[1])

@@ -1,0 +1,242 @@
+"""The paper's shared-memory 2D-FFT implementation variants (§3.3, Fig. 1).
+
+Each variant computes the SAME transform — r2c 2D FFT of a real N x M matrix
+(r2c along the contiguous rows, c2c along the columns) — with a different
+task/synchronization structure.  The HPX concepts map to XLA as:
+
+  HPX fine-grained task       ->  one ``lax.map`` chunk (task_size rows)
+  future dependency chain     ->  per-chunk compute+scatter interleaving
+  global sync barrier         ->  ``lax.optimization_barrier`` (forbids fusion
+                                  across the barrier, forcing materialization
+                                  exactly like a join on all futures)
+  AGAS implicit data movement ->  gather through explicit global index arrays
+  hpx::for_loop (bulk sync)   ->  whole-array ops inside one fused jit
+
+The paper's finding — bulk-synchronous beats clever asynchrony because cache
+behaviour dominates — is reproduced here as: chunked variants defeat XLA
+fusion and add HBM round-trips; the barrier *placement* decides whether the
+transpose reads or writes contiguously.
+
+All variants return (re, im) of shape (N, M//2 + 1) and are verified
+identical against numpy in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algo
+from .plan import Plan, Planner
+
+Complex = algo.Complex
+
+VARIANTS = ("future_naive", "future_opt", "future_sync", "future_agas", "for_loop")
+
+
+def _row_plan(planner: Planner, m: int) -> Plan:
+    return planner.plan(m, kind="r2c")
+
+
+def _col_plan(planner: Planner, n: int) -> Plan:
+    return planner.plan(n, kind="c2c")
+
+
+def _barrier(*trees):
+    """Global synchronization barrier: forces XLA to materialize operands and
+    forbids fusion across it (the 'join all futures' of the paper)."""
+    flat, treedef = jax.tree_util.tree_flatten(trees)
+    flat = jax.lax.optimization_barrier(tuple(flat))
+    out = jax.tree_util.tree_unflatten(treedef, list(flat))
+    return out[0] if len(out) == 1 else out
+
+
+# ---------------------------------------------------------------------------
+# variant: for_loop — the paper's winner (bulk-synchronous, fully fused)
+# ---------------------------------------------------------------------------
+
+
+def fft2_for_loop(x: jax.Array, planner: Planner) -> Complex:
+    """hpx::experimental::for_loop analogue: whole-array bulk stages inside a
+    single jit; XLA fuses/fissions freely (the best 'cache schedule')."""
+    from .plan import execute
+    n, m = x.shape
+    y = execute(_row_plan(planner, m), x)                       # r2c rows
+    yt = (y[0].T, y[1].T)                                       # transpose
+    z = execute(_col_plan(planner, n), yt)                      # c2c rows
+    return z[0].T, z[1].T                                       # transpose back
+
+
+# ---------------------------------------------------------------------------
+# variant: future_sync — barrier after EVERY algorithmic step
+# ---------------------------------------------------------------------------
+
+
+def fft2_future_sync(x: jax.Array, planner: Planner) -> Complex:
+    from .plan import execute
+    n, m = x.shape
+    y = execute(_row_plan(planner, m), x)
+    y = _barrier(y)
+    yt = (y[0].T, y[1].T)
+    yt = _barrier(yt)
+    z = execute(_col_plan(planner, n), yt)
+    z = _barrier(z)
+    return z[0].T, z[1].T
+
+
+# ---------------------------------------------------------------------------
+# chunked "futurized" variants — task_size rows per task
+# ---------------------------------------------------------------------------
+
+
+def _chunked_rfft(x: jax.Array, plan: Plan, task_size: int) -> Complex:
+    """lax.map over row chunks = one HPX task per chunk."""
+    from .plan import execute
+    n, m = x.shape
+    task_size = min(task_size, n)
+    while n % task_size:
+        task_size -= 1
+    xc = x.reshape(n // task_size, task_size, m)
+    re, im = jax.lax.map(lambda c: execute(plan, c), xc)
+    return re.reshape(n, m // 2 + 1), im.reshape(n, m // 2 + 1)
+
+
+def fft2_future_naive(x: jax.Array, planner: Planner, task_size: int = 8) -> Complex:
+    """Naive futurization (paper: 'postpone or remove synchronization').
+
+    Each FFT task's dependent transpose task immediately scatters its rows
+    into the *columns* of the transposed buffer — non-contiguous writes, no
+    barrier between FFT and transpose.  Mirrors the paper's cache-hostile
+    read-side-optimal ordering.
+    """
+    from .plan import execute
+    n, m = x.shape
+    mh = m // 2 + 1
+    task_size = max(1, min(task_size, n))
+    while n % task_size:
+        task_size -= 1
+    n_tasks = n // task_size
+    row_plan = _row_plan(planner, m)
+
+    def task(carry, i):
+        tre, tim = carry
+        chunk = jax.lax.dynamic_slice_in_dim(x, i * task_size, task_size, 0)
+        fre, fim = execute(row_plan, chunk)                     # FFT task
+        # dependent transpose task: scatter rows into columns (strided writes)
+        tre = jax.lax.dynamic_update_slice(tre, fre.T, (0, i * task_size))
+        tim = jax.lax.dynamic_update_slice(tim, fim.T, (0, i * task_size))
+        return (tre, tim), 0
+
+    init = (jnp.zeros((mh, n), jnp.float32), jnp.zeros((mh, n), jnp.float32))
+    (tre, tim), _ = jax.lax.scan(task, init, jnp.arange(n_tasks))
+    z = execute(_col_plan(planner, n), (tre, tim))
+    return z[0].T, z[1].T
+
+
+def fft2_future_opt(x: jax.Array, planner: Planner, task_size: int = 8) -> Complex:
+    """Optimized transpose (paper §3.2): the barrier is moved BEFORE the
+    transpose, so transpose tasks WRITE contiguous memory (each task gathers
+    strided reads but writes one contiguous row-block of the transposed
+    buffer)."""
+    from .plan import execute
+    n, m = x.shape
+    mh = m // 2 + 1
+    y = _chunked_rfft(x, _row_plan(planner, m), task_size)
+    y = _barrier(y)                                             # moved barrier
+    ts = max(1, min(task_size, mh))
+    while mh % ts:
+        ts -= 1
+    yc = (y[0].reshape(n, mh // ts, ts), y[1].reshape(n, mh // ts, ts))
+
+    def transpose_task(j):
+        # write-contiguous block (ts, n) of the transposed matrix
+        return yc[0][:, j, :].T, yc[1][:, j, :].T
+
+    tre, tim = jax.lax.map(transpose_task, jnp.arange(mh // ts))
+    t = (tre.reshape(mh, n), tim.reshape(mh, n))
+    z = execute(_col_plan(planner, n), t)
+    return z[0].T, z[1].T
+
+
+# ---------------------------------------------------------------------------
+# variant: future_agas — implicit global-address-space data movement
+# ---------------------------------------------------------------------------
+
+
+def fft2_future_agas(x: jax.Array, planner: Planner) -> Complex:
+    """AGAS analogue: data 'moves' by resolving global indices through an
+    address table (gather), instead of a direct transpose copy.  The extra
+    index arithmetic + gather is the measurable AGAS overhead of Fig. 1."""
+    from .plan import execute
+    n, m = x.shape
+    mh = m // 2 + 1
+    y = execute(_row_plan(planner, m), x)
+    # global address table: flat_transposed[i] lives at flat[src[i]]
+    src = (jnp.arange(mh * n, dtype=jnp.int32) % n) * mh \
+        + (jnp.arange(mh * n, dtype=jnp.int32) // n)
+    yt = (jnp.take(y[0].reshape(-1), src).reshape(mh, n),
+          jnp.take(y[1].reshape(-1), src).reshape(mh, n))
+    z = execute(_col_plan(planner, n), yt)
+    dst = (jnp.arange(n * mh, dtype=jnp.int32) % mh) * n \
+        + (jnp.arange(n * mh, dtype=jnp.int32) // mh)
+    return (jnp.take(z[0].reshape(-1), dst).reshape(n, mh),
+            jnp.take(z[1].reshape(-1), dst).reshape(n, mh))
+
+
+# ---------------------------------------------------------------------------
+# strided (no-transpose) column FFT — the paper's §3.2 'strided access' option
+# ---------------------------------------------------------------------------
+
+
+def fft2_strided(x: jax.Array, planner: Planner) -> Complex:
+    """Keep row-major layout; run the second-dimension FFT with stride N
+    (contract over the leading axis directly, no transpose)."""
+    from .plan import execute
+    n, m = x.shape
+    y = execute(_row_plan(planner, m), x)                       # (n, mh)
+    col_plan = _col_plan(planner, n)
+    # contract the *leading* axis against the DFT chain: move axis without
+    # materializing a transpose (XLA keeps the strided layout)
+    yt = (jnp.moveaxis(y[0], 0, -1), jnp.moveaxis(y[1], 0, -1))
+    z = execute(col_plan, yt)
+    return jnp.moveaxis(z[0], -1, 0), jnp.moveaxis(z[1], -1, 0)
+
+
+def run_variant(name: str, x: jax.Array, planner: Planner,
+                task_size: int = 8) -> Complex:
+    if name == "future_naive":
+        return fft2_future_naive(x, planner, task_size)
+    if name == "future_opt":
+        return fft2_future_opt(x, planner, task_size)
+    if name == "future_sync":
+        return fft2_future_sync(x, planner)
+    if name == "future_agas":
+        return fft2_future_agas(x, planner)
+    if name == "for_loop":
+        return fft2_for_loop(x, planner)
+    if name == "strided":
+        return fft2_strided(x, planner)
+    raise ValueError(f"unknown variant {name!r}; options: {VARIANTS + ('strided',)}")
+
+
+# ---------------------------------------------------------------------------
+# instrumented decomposition (paper Fig. 2): per-stage timings
+# ---------------------------------------------------------------------------
+
+
+def staged_for_loop(x: jax.Array, planner: Planner):
+    """Return separately-jitted stages so benchmarks can time fft1 /
+    transpose / fft2 / transpose-back independently (Fig. 2)."""
+    from .plan import execute
+    n, m = x.shape
+    row_plan, col_plan = _row_plan(planner, m), _col_plan(planner, n)
+    s1 = jax.jit(lambda a: execute(row_plan, a))
+    s2 = jax.jit(lambda c: (c[0].T, c[1].T))
+    s3 = jax.jit(lambda c: execute(col_plan, c))
+    s4 = jax.jit(lambda c: (c[0].T, c[1].T))
+    return [("fft_r2c_rows", s1), ("transpose", s2), ("fft_c2c_cols", s3),
+            ("transpose_back", s4)]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticDataset, batch_specs
+
+__all__ = ["SyntheticDataset", "batch_specs"]

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the FFT compute hot spots (validated in
+interpret mode against pure-jnp oracles in tests/):
+
+  dft_matmul — fused four-step FFT (2 complex MXU matmuls + twiddle in VMEM)
+  transpose  — write-contiguous tiled transpose (the paper's optimized
+               transpose, as a BlockSpec layout)
+  twiddle    — fused complex pointwise multiply (spectral filters)
+  fftconv    — fully fused y = ifft(fft(x) * H): one HBM read + one write
+               per element (FlashFFTConv-style; the §Perf-A memory fix)
+"""
+
+from .dft_matmul import fft_four_step, fft_four_step_ref
+from .fftconv import fftconv_fused, fftconv_fused_ref
+from .transpose import transpose, transpose_ref
+from .twiddle import complex_multiply, complex_multiply_ref
+
+__all__ = [
+    "fft_four_step", "fft_four_step_ref",
+    "fftconv_fused", "fftconv_fused_ref",
+    "transpose", "transpose_ref",
+    "complex_multiply", "complex_multiply_ref",
+]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: batched four-step FFT as MXU matmuls with fused twiddle.
+
+One grid step processes a (block_rows, n1, n2) tile of the batch entirely in
+VMEM: two complex DFT matmuls (4 real MXU matmuls each, or 3 with Karatsuba)
+with the twiddle multiply fused between them — no HBM round-trip between the
+four steps (the CPU version pays one per stage).
+
+This is the paper's "task": block_rows is the task size (rows per task), and
+the kernel IS the bulk-synchronous `for_loop` body — all rows of a block run
+one fused schedule, matching the paper's winning variant.
+
+Layout notes (TPU):
+  * n2 sits in the lane dimension — plans choose n2 as a multiple of 128.
+  * n1 sits in sublanes; the step-1 contraction is expressed with
+    dot_general over the middle axis so Mosaic keeps the lane layout.
+  * DFT matrices / twiddles are f32 VMEM residents shared by all rows of the
+    block; f32 accumulate via preferred_element_type.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdot(ar, ai, br, bi, karatsuba: bool):
+    """Complex contraction: (..., k) x (k, m) -> (..., m)."""
+    dn = (((ar.ndim - 1,), (0,)), ((), ()))
+    mm = functools.partial(jax.lax.dot_general, dimension_numbers=dn,
+                           preferred_element_type=jnp.float32)
+    if karatsuba:
+        p1 = mm(ar, br)
+        p2 = mm(ai, bi)
+        p3 = mm(ar + ai, br + bi)
+        return p1 - p2, p3 - p1 - p2
+    return mm(ar, br) - mm(ai, bi), mm(ar, bi) + mm(ai, br)
+
+
+def _four_step_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, twr_ref, twi_ref,
+                      w2r_ref, w2i_ref, or_ref, oi_ref, *,
+                      n1: int, n2: int, karatsuba: bool, permuted: bool):
+    bm = xr_ref.shape[0]
+    ar = xr_ref[...].reshape(bm, n1, n2)
+    ai = xi_ref[...].reshape(bm, n1, n2)
+
+    # step 1: DFT_n1 along axis 1. Work on the (bm, n2, n1) view so the
+    # contraction is a last-axis MXU matmul.
+    art = jnp.swapaxes(ar, 1, 2)
+    ait = jnp.swapaxes(ai, 1, 2)
+    btr, bti = _cdot(art, ait, w1r_ref[...], w1i_ref[...], karatsuba)
+    br = jnp.swapaxes(btr, 1, 2)          # (bm, k1, n2)
+    bi = jnp.swapaxes(bti, 1, 2)
+
+    # step 2: fused twiddle T[k1, n2] — stays in VREGs
+    twr = twr_ref[...]
+    twi = twi_ref[...]
+    cr = br * twr - bi * twi
+    ci = br * twi + bi * twr
+
+    # step 3: DFT_n2 along the last (lane) axis
+    dr, di = _cdot(cr, ci, w2r_ref[...], w2i_ref[...], karatsuba)
+
+    if permuted:
+        or_ref[...] = dr.reshape(bm, n1 * n2)
+        oi_ref[...] = di.reshape(bm, n1 * n2)
+    else:
+        # step 4: digit transpose X[k2*n1 + k1] = D[k1, k2]
+        or_ref[...] = jnp.swapaxes(dr, 1, 2).reshape(bm, n1 * n2)
+        oi_ref[...] = jnp.swapaxes(di, 1, 2).reshape(bm, n1 * n2)
+
+
+def fft_four_step_pallas(x: Tuple[jax.Array, jax.Array],
+                         factors: Tuple[int, int],
+                         *, karatsuba: bool = False, permuted: bool = False,
+                         block_rows: int = 8,
+                         interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Batched c2c FFT along the last axis; x = (re, im), shape (..., n).
+
+    ``interpret=True`` runs the kernel body on CPU (this container); on real
+    TPU pass interpret=False.
+    """
+    from repro.core import algo
+
+    n1, n2 = factors
+    n = n1 * n2
+    xr, xi = x
+    assert xr.shape[-1] == n, (xr.shape, factors)
+    batch_shape = xr.shape[:-1]
+    b = 1
+    for s in batch_shape:
+        b *= s
+    xr2 = xr.reshape(b, n)
+    xi2 = xi.reshape(b, n)
+
+    bm = min(block_rows, b)
+    while b % bm:
+        bm -= 1
+
+    w1 = algo.dft_matrix(n1, -1)
+    w2 = algo.dft_matrix(n2, -1)
+    tw = algo.twiddle_factors(n1, n2, -1)
+
+    grid = (b // bm,)
+    data_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    const = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+
+    kernel = functools.partial(_four_step_kernel, n1=n1, n2=n2,
+                               karatsuba=karatsuba, permuted=permuted)
+    out_shape = [jax.ShapeDtypeStruct((b, n), jnp.float32)] * 2
+    orr, oii = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[data_spec, data_spec,
+                  const((n1, n1)), const((n1, n1)),
+                  const((n1, n2)), const((n1, n2)),
+                  const((n2, n2)), const((n2, n2))],
+        out_specs=[data_spec, data_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr2, xi2, w1[0], w1[1], tw[0], tw[1], w2[0], w2[1])
+    return orr.reshape(*batch_shape, n), oii.reshape(*batch_shape, n)

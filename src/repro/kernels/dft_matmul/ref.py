@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the dft_matmul Pallas kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core import algo
+
+
+def fft_four_step_ref(x: Tuple[jax.Array, jax.Array],
+                      factors: Tuple[int, int],
+                      *, karatsuba: bool = False,
+                      permuted: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Reference: the core four-step algorithm (itself numpy-validated)."""
+    return algo.fft(x, factors=factors, karatsuba=karatsuba, permuted=permuted)

@@ -1,0 +1,4 @@
+from .ops import fftconv_fused
+from .ref import fftconv_fused_ref
+
+__all__ = ["fftconv_fused", "fftconv_fused_ref"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tiled transpose kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def transpose_ref(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)

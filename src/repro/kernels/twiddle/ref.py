@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused complex multiply kernel."""
+
+from __future__ import annotations
+
+from repro.core.algo import cmul
+
+
+def complex_multiply_ref(a, b):
+    return cmul(a, b)

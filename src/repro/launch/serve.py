@@ -1,0 +1,148 @@
+"""Serving launcher: batched prefill + decode loop with a request queue.
+
+Continuous-batching-lite: a fixed decode batch; finished sequences (EOS or
+length budget) are refilled from the pending queue between steps, which is
+the structure a production scheduler (vLLM-style) needs — admission control
+and KV reuse slot in behind ``ServeLoop.step``.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+      --requests 16 --batch 4 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import lm
+from repro.models.config import ShapeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new: int
+    out: Optional[List[int]] = None
+
+
+class ServeLoop:
+    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0,
+                 prompt_bucket: int = 8):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        recurrent = any(k in ("mamba2", "mlstm", "slstm", "fftconv_mlp")
+                        for k, _ in cfg.resolved_segments())
+        # recurrent state would absorb pad tokens — exact lengths for those
+        # (attention caches mask pads via "len", so buckets are safe there)
+        self.prompt_bucket = 1 if recurrent else prompt_bucket
+        self.params = lm.init_params(cfg, jax.random.key(seed))
+        self.cache = lm.init_cache(cfg, batch, max_len)
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._step = jax.jit(
+            lambda p, c, b: lm.decode_step(p, cfg, c, b))
+        # ONE forward pass per admitted prompt (bucketed lengths), its
+        # single-sequence cache merged into the batch cache at the slot
+        self._prefill = jax.jit(
+            lambda p, b, li: lm.prefill(p, cfg, b, max_len=max_len,
+                                        last_index=li))
+        self._merge = jax.jit(self._merge_impl)
+
+    @staticmethod
+    def _merge_impl(cache, c1, i, true_len):
+        segs = jax.tree_util.tree_map(
+            lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), i, axis=1),
+            cache["segments"], c1["segments"])
+        return {"len": cache["len"].at[i].set(true_len), "segments": segs}
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                n = len(req.prompt)
+                bucket = -(-n // self.prompt_bucket) * self.prompt_bucket
+                prompt = np.zeros((1, bucket), np.int32)
+                prompt[0, :n] = req.prompt
+                logits, c1 = self._prefill(
+                    self.params, {"tokens": jnp.asarray(prompt)},
+                    jnp.asarray([n - 1]))
+                # cache positions n..bucket-1 hold padding but "len"=n masks
+                # them out of attention (recurrent archs use exact buckets)
+                self.cache = self._merge(self.cache, c1, i, n)
+                first = int(np.argmax(np.asarray(logits)[0, 0]))
+                req.out.append(first)              # token #1 from prefill
+                req._last = first
+                if len(req.out) >= req.max_new:
+                    self.done.append(req)
+                    self.slots[i] = None
+
+    def step(self):
+        self._admit()
+        tok = np.zeros((self.batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                tok[i, 0] = req._last
+        logits, self.cache = self._step(self.params, self.cache,
+                                        {"tokens": jnp.asarray(tok)})
+        lg = np.asarray(logits)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            nxt = int(np.argmax(lg[i, 0]))
+            req.out.append(nxt)
+            req._last = nxt
+            if len(req.out) >= req.max_new:
+                self.done.append(req)
+                self.slots[i] = None
+
+    def drain(self):
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rng = np.random.default_rng(0)
+    loop = ServeLoop(cfg, args.batch, args.max_len)
+    t0 = time.perf_counter()
+    for r in range(args.requests):
+        loop.submit(Request(r, rng.integers(
+            0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            args.max_new))
+    loop.drain()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in loop.done)
+    print(json.dumps({"requests": len(loop.done),
+                      "generated_tokens": toks,
+                      "tok_per_s": round(toks / dt, 1)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

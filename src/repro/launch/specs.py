@@ -1,0 +1,215 @@
+"""Per-cell (arch x shape x mesh) step functions and ShapeDtypeStruct inputs.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins with NO device allocation — decode caches for 500k-token
+sequences are described, never materialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_specs
+from repro.models import lm
+from repro.models.config import ArchConfig, ShapeConfig, SHAPES_BY_NAME
+from repro.models.params import sharding_rules
+from repro.optim import AdamWConfig, adamw_update, opt_meta
+from repro.parallel import make_rules, logical_shardings, sanitized_shardings
+from repro.models.params import abstract_tree, pspec_tree
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    kind: str                       # train | prefill | decode
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...]
+    skip_reason: Optional[str] = None
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        s = 1
+        for a in ax:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[ax]
+
+
+def _tp_for(dim: int, tp: Optional[str], mesh) -> Optional[str]:
+    """Shard dim over tp only if it divides evenly."""
+    if tp is None:
+        return None
+    return tp if dim % mesh.shape[tp] == 0 and dim >= mesh.shape[tp] else None
+
+
+def batch_abstract(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    st = 1 if shape.kind == "decode" else s
+    out: Dict[str, Any] = {}
+    if cfg.frontend:
+        out["embeds"] = jax.ShapeDtypeStruct((b, st, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, st), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        out["labels"] = jax.ShapeDtypeStruct((b, st), jnp.int32)
+        if cfg.rope == "mrope":
+            out["positions"] = jax.ShapeDtypeStruct((3, b, st), jnp.int32)
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, batch: int, mesh, rules) -> Dict[str, Any]:
+    """PartitionSpec tree matching lm.init_cache's structure.
+
+    Batch >= dp: shard batch over dp (throughput decode).  Batch < dp (the
+    long_500k single-sequence cell): shard the SEQUENCE of attention caches /
+    history buffers over dp instead (flash-decoding layout), and state dims
+    over tp.
+    """
+    dp, tp = rules.get("dp"), rules.get("tp")
+    dpn = _axis_size(mesh, dp)
+    shard_b = batch % dpn == 0 and batch >= dpn
+    bax = dp if shard_b else None
+    sax = None if shard_b else dp
+    kv, hd = cfg.num_kv_heads, cfg.hd
+
+    segs = []
+    for kind, count in cfg.resolved_segments():
+        if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+            kvax = _tp_for(kv, tp, mesh)
+            hax = None if kvax else _tp_for(hd, tp, mesh)
+            spec = P(None, bax, sax, kvax, hax)
+            segs.append({"k": spec, "v": spec})
+        elif kind == "mamba2":
+            from repro.models.ssm import mamba2_dims
+            di, nh, n = mamba2_dims(cfg)
+            segs.append({
+                "conv": P(None, bax, None, _tp_for(di + 2 * n, tp, mesh)),
+                "ssd": P(None, bax, _tp_for(nh, tp, mesh), None, None)})
+        elif kind == "mlstm":
+            dh = 2 * cfg.d_model // cfg.num_heads
+            hax = _tp_for(cfg.num_heads, tp, mesh)
+            kax = None if hax else _tp_for(dh, tp, mesh)
+            segs.append({"mlstm": P(None, bax, hax, kax, None)})
+        elif kind == "slstm":
+            dh = cfg.d_model // cfg.slstm_heads
+            leaf = P(None, bax, None, _tp_for(dh, tp, mesh))
+            segs.append({"slstm": (leaf, leaf, leaf, leaf)})
+        elif kind == "fftconv_mlp":
+            segs.append({"v_hist": P(None, bax, sax,
+                                     _tp_for(cfg.d_model, tp, mesh))})
+        else:
+            segs.append({})
+    return {"len": P(bax if shard_b else None), "segments": segs}
+
+
+def build_cell(arch_name: str, shape_name: str, mesh,
+               pipeline: bool = False) -> Cell:
+    import os
+    cfg = get_config(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    # REPRO_SERVE_WEIGHT_STATIONARY=1 flips inference cells to the
+    # weight-stationary serving layout (§Perf hillclimb): bf16 params, MoE
+    # d_ff sharded over data (no expert-weight gathers), FSDP disabled when
+    # TP-sharded bf16 weights fit the 16 GB/chip HBM budget.  Default keeps
+    # the FSDP-gathered f32 baseline the first sweep recorded.
+    profile = "train"
+    if shape.kind != "train" and os.environ.get(
+            "REPRO_SERVE_WEIGHT_STATIONARY", "0") not in ("0", "", "false"):
+        profile = "serve"
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16",
+                                  reduce_dtype="bfloat16")
+    if shape.kind == "train" and os.environ.get(
+            "REPRO_REMAT_POLICY", "") in ("dots", "full"):
+        cfg = dataclasses.replace(
+            cfg, remat_policy=os.environ["REPRO_REMAT_POLICY"])
+    rules = make_rules(mesh, pipeline_pods=pipeline, profile=profile)
+    if profile == "serve":
+        from repro.models.params import param_count
+        pbytes = param_count(lm.model_meta(cfg)) * 2
+        tp_size = mesh.shape.get("model", 1)
+        if pbytes / tp_size <= 8e9 and "fsdp" in rules:
+            del rules["fsdp"]          # weights TP-resident, no per-use gather
+
+    if shape.kind == "decode" and shape.name == "long_500k" and not cfg.subquadratic:
+        return Cell(cfg, shape, "skip", None, (), (), (),
+                    skip_reason="pure full-attention arch: quadratic attention "
+                    "at 500k context; skipped per assignment (see DESIGN.md)")
+
+    meta = lm.model_meta(cfg)
+    pspecs = logical_shardings(mesh, meta, rules)
+    params_abs = abstract_tree(meta)
+    batch_abs = batch_abstract(cfg, shape)
+    raw_bspecs = batch_specs(cfg, shape, rules)
+    # decode batches may omit labels/positions present in raw specs
+    raw_bspecs = {k: raw_bspecs[k] for k in batch_abs}
+    bspecs = sanitized_shardings(mesh, batch_abs, raw_bspecs)
+
+    num_groups = _axis_size(mesh, rules.get("dp"))
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig()
+        om = opt_meta(meta)
+        opt_abs = abstract_tree(om)
+
+        from repro.parallel.pipelined_lm import (pipelined_loss_fn,
+                                                 pipeline_param_shardings,
+                                                 supports_pipeline)
+        use_pipeline = (pipeline and "pod" in mesh.axis_names
+                        and supports_pipeline(cfg))
+        if use_pipeline:
+            pspecs = pipeline_param_shardings(mesh, meta, rules)
+            ospecs = {"mu": pipeline_param_shardings(mesh, om["mu"], rules),
+                      "nu": pipeline_param_shardings(mesh, om["nu"], rules),
+                      "step": logical_shardings(mesh, om["step"], rules)}
+            loss_impl = lambda p, b: pipelined_loss_fn(p, cfg, b, mesh, rules)
+        else:
+            ospecs = logical_shardings(mesh, om, rules)
+            loss_impl = lambda p, b: lm.loss_fn(p, cfg, b, num_groups)
+
+        def train_step(params, opt_state, batch):
+            with sharding_rules(mesh, rules):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_impl, has_aux=True)(params, batch)
+            params, opt_state, om_ = adamw_update(ocfg, grads, params, opt_state)
+            return params, opt_state, dict(metrics, loss=loss, **om_)
+
+        return Cell(cfg, shape, "train", train_step,
+                    (params_abs, opt_abs, batch_abs),
+                    (pspecs, ospecs, bspecs), donate=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with sharding_rules(mesh, rules):
+                logits, _ = lm.forward(params, cfg, batch, num_groups)
+            return logits[:, -1:, :]
+
+        return Cell(cfg, shape, "prefill", prefill_step,
+                    (params_abs, batch_abs), (pspecs, bspecs), donate=())
+
+    # decode
+    cache_abs = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = sanitized_shardings(
+        mesh, cache_abs, cache_pspecs(cfg, shape.global_batch, mesh, rules))
+
+    def serve_step(params, cache, batch):
+        with sharding_rules(mesh, rules):
+            return lm.decode_step(params, cfg, cache, batch, num_groups)
+
+    return Cell(cfg, shape, "decode", serve_step,
+                (params_abs, cache_abs, batch_abs),
+                (pspecs, cspecs, bspecs), donate=(1,))

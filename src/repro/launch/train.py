@@ -1,0 +1,64 @@
+"""Training launcher.
+
+On real hardware this runs the production mesh; on this CPU container use
+--smoke (reduced config, local mesh over however many host devices exist).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+      --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="local mesh data-parallel size (0 = all devices)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    if args.mesh == "local":
+        n = len(jax.devices())
+        data = args.data_axis or n
+        mesh = make_local_mesh(data=data, model=n // data) if n > 1 else None
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    tr = Trainer(cfg, shape, mesh,
+                 TrainerConfig(ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every),
+                 AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                             total_steps=args.steps))
+    params, _, history = tr.run(args.steps)
+    print(json.dumps({"first_loss": history[0]["loss"],
+                      "last_loss": history[-1]["loss"],
+                      "steps": len(history),
+                      "straggler_events": len(tr.straggler_events)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

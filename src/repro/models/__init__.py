@@ -1,0 +1,16 @@
+from . import blocks, frontend, lm, ssm
+from .config import (ArchConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME,
+                     TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+from .lm import decode_step, forward, init_cache, init_params, loss_fn, model_meta
+from .params import (ParamMeta, abstract_tree, init_tree, param_count,
+                     pspec_tree, shard_act, sharding_rules)
+
+__all__ = [
+    "blocks", "frontend", "lm", "ssm",
+    "ArchConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "model_meta", "init_params", "forward", "loss_fn", "init_cache",
+    "decode_step",
+    "ParamMeta", "init_tree", "abstract_tree", "pspec_tree", "param_count",
+    "shard_act", "sharding_rules",
+]

@@ -1,0 +1,45 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify the
+transformer backbone only; input_specs() provides precomputed frame/patch
+embeddings).
+
+A real deployment would run a ViT patch encoder (qwen2-vl) or EnCodec
+quantizer (musicgen) here — the latter being itself an STFT consumer of the
+repro.core FFT stack.  For this framework the frontend contract is just the
+embedding tensor contract below, plus M-RoPE position streams for vision.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+
+def synth_embeddings(cfg: ArchConfig, batch: int, seq: int,
+                     key: jax.Array) -> jax.Array:
+    """Stand-in for frontend output: (B, S, d) embeddings."""
+    return jax.random.normal(key, (batch, seq, cfg.d_model),
+                             jnp.float32).astype(jnp.dtype(cfg.compute_dtype)) * 0.02
+
+
+def mrope_positions(batch: int, seq: int, grid_hw: int = 16) -> jax.Array:
+    """(3, B, S) temporal/height/width position streams for M-RoPE.
+
+    Synthetic layout: a leading image of grid_hw x grid_hw patches followed
+    by text tokens (qwen2-vl dynamic-resolution order, fixed here)."""
+    n_img = min(grid_hw * grid_hw, seq)
+    t = np.zeros(seq, np.int32)
+    h = np.zeros(seq, np.int32)
+    w = np.zeros(seq, np.int32)
+    h[:n_img] = np.arange(n_img) // grid_hw
+    w[:n_img] = np.arange(n_img) % grid_hw
+    text_pos = np.arange(seq - n_img) + (n_img // grid_hw)
+    t[n_img:] = text_pos
+    h[n_img:] = text_pos
+    w[n_img:] = text_pos
+    pos = np.stack([t, h, w])                                   # (3, S)
+    return jnp.asarray(np.broadcast_to(pos[:, None], (3, batch, seq)))

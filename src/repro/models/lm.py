@@ -1,0 +1,459 @@
+"""Decoder LM assembled from heterogeneous block segments.
+
+The layer stack is declared as (kind, count) segments (config.resolved_
+segments).  Each segment's parameters are STACKED along a leading layer axis
+and executed with ``lax.scan`` + optional remat — this keeps the HLO size
+O(#segments) instead of O(#layers), which is what makes 64-layer 104B-param
+dry-runs compile quickly and keeps remat policy uniform at 1000-node scale.
+
+"shared_attn" segments (zamba2) reference one shared parameter set stored at
+the top level; each occurrence still owns its KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _scan_unroll() -> bool:
+    """Full layer-loop unroll for dry-run analysis: XLA's HloCostAnalysis
+    visits a while-loop body ONCE, so flop/collective accounting of a scanned
+    stack is low by ~num_layers.  The dry-run sets REPRO_SCAN_UNROLL=1 to get
+    truthful roofline numbers; training keeps the rolled loop (small HLO)."""
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") not in ("0", "", "false")
+
+from . import blocks, ssm
+from .config import ArchConfig
+from .params import ParamMeta, init_tree, is_meta, shard_act
+
+# ---------------------------------------------------------------------------
+# metadata assembly
+# ---------------------------------------------------------------------------
+
+
+def _layer_meta(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    if kind in ("attn_mlp", "shared_attn"):
+        return {"ln1": blocks.norm_meta(cfg), "attn": blocks.attention_meta(cfg),
+                "ln2": blocks.norm_meta(cfg), "mlp": blocks.mlp_meta(cfg)}
+    if kind == "attn_moe":
+        return {"ln1": blocks.norm_meta(cfg), "attn": blocks.attention_meta(cfg),
+                "ln2": blocks.norm_meta(cfg), "moe": blocks.moe_meta(cfg)}
+    if kind == "fftconv_mlp":
+        return {"ln1": blocks.norm_meta(cfg), "mix": blocks.fftconv_meta(cfg),
+                "ln2": blocks.norm_meta(cfg), "mlp": blocks.mlp_meta(cfg)}
+    if kind == "mamba2":
+        return {"ln": blocks.norm_meta(cfg), "mixer": ssm.mamba2_meta(cfg)}
+    if kind == "mlstm":
+        return {"ln": blocks.norm_meta(cfg), "mixer": ssm.mlstm_meta(cfg)}
+    if kind == "slstm":
+        return {"ln": blocks.norm_meta(cfg), "mixer": ssm.slstm_meta(cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _stack_meta(meta: Dict, count: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda m: ParamMeta((count,) + m.shape, (None,) + m.logical,
+                            init=m.init, scale=m.scale, dtype=m.dtype),
+        meta, is_leaf=is_meta)
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab padded to a lane-aligned, TP-divisible multiple (MaxText-style);
+    the pad columns are masked to -inf in the logits."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def model_meta(cfg: ArchConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, padded_vocab(cfg)
+    tree: Dict[str, Any] = {
+        "embed": ParamMeta((v, d), ("tp", "fsdp"), scale=0.02),
+        "final_norm": blocks.norm_meta(cfg),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamMeta((d, v), ("fsdp", "tp"),
+                                    scale=0.02 / math.sqrt(d))
+    needs_shared = any(k == "shared_attn" for k, _ in cfg.resolved_segments())
+    if needs_shared:
+        tree["shared"] = _layer_meta(cfg, "shared_attn")
+    for kind, count in cfg.resolved_segments():
+        if kind == "shared_attn":
+            tree["segments"].append({})
+        else:
+            tree["segments"].append(
+                {"layers": _stack_meta(_layer_meta(cfg, kind), count)})
+    if cfg.param_dtype != "float32":
+        # serving deployments hold bf16 weights (no optimizer to feed)
+        pd = jnp.dtype(cfg.param_dtype)
+        tree = jax.tree_util.tree_map(
+            lambda m: dataclasses.replace(m, dtype=pd) if is_meta(m) else m,
+            tree, is_leaf=is_meta)
+    return tree
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return init_tree(model_meta(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(cfg: ArchConfig, kind: str, p: Dict, x: jax.Array,
+               positions: jax.Array, cache: Optional[Dict],
+               num_groups: int) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+        h = blocks.apply_norm(p["ln1"], cfg, x)
+        attn_out, new_cache = blocks.attention_fwd(
+            p["attn"], cfg, h, positions, cache)
+        if cfg.parallel_block:
+            # command-r: attention and FFN in parallel off one norm
+            mlp_out = blocks.mlp_fwd(p["mlp"], cfg, h)
+            return x + attn_out + mlp_out, new_cache, aux
+        x = x + attn_out
+        h2 = blocks.apply_norm(p["ln2"], cfg, x)
+        if kind == "attn_moe":
+            moe_out, aux = blocks.moe_fwd(p["moe"], cfg, h2, num_groups)
+            return x + moe_out, new_cache, aux
+        return x + blocks.mlp_fwd(p["mlp"], cfg, h2), new_cache, aux
+    if kind == "fftconv_mlp":
+        h = blocks.apply_norm(p["ln1"], cfg, x)
+        x = x + blocks.fftconv_fwd(p["mix"], cfg, h)
+        h2 = blocks.apply_norm(p["ln2"], cfg, x)
+        return x + blocks.mlp_fwd(p["mlp"], cfg, h2), None, aux
+    # recurrent mixers
+    h = blocks.apply_norm(p["ln"], cfg, x)
+    fwd = {"mamba2": ssm.mamba2_fwd, "mlstm": ssm.mlstm_fwd,
+           "slstm": ssm.slstm_fwd}[kind]
+    out, new_state = fwd(p["mixer"], cfg, h, state=cache)
+    return x + out, new_state, aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if not cfg.remat:
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Dict, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            num_groups: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+        bsz, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard_act(x, "dp", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    if cfg.rope == "none":
+        x = x + _sinusoidal(positions if positions.ndim == 2 else positions[0],
+                            cfg.d_model).astype(x.dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg, seg_cfg in zip(params["segments"], cfg.resolved_segments()):
+        kind, count = seg_cfg
+        if kind == "shared_attn":
+            body = _remat(
+                lambda x_, p_: _block_fwd(cfg, "shared_attn", p_, x_,
+                                          positions, None, num_groups)[::2],
+                cfg)
+            for _ in range(count):
+                x, aux = body(x, params["shared"])
+                aux_total = aux_total + aux
+            continue
+
+        def body(x_, layer_p, _kind=kind):
+            x2, _, aux = _block_fwd(cfg, _kind, layer_p, x_, positions,
+                                    None, num_groups)
+            return x2, aux
+        body = _remat(body, cfg)
+        x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, seg["layers"],
+                                unroll=_scan_unroll())
+        aux_total = aux_total + jnp.sum(auxs)
+
+    x = blocks.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dt)
+    logits = _mask_pad_vocab(cfg, logits)
+    logits = shard_act(logits, "dp", None, "tp")
+    return logits, aux_total
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """Absolute sinusoidal position encoding (musicgen-style, rope='none')."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mask_pad_vocab(cfg: ArchConfig, logits: jax.Array) -> jax.Array:
+    vp = padded_vocab(cfg)
+    if vp == cfg.vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+def loss_fn(params: Dict, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            num_groups: int = 1) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch, num_groups)
+    labels = batch["labels"]
+    # memory-lean xent over the tp-sharded vocab axis: no (B,S,V) one-hot or
+    # f32 logits copy — the f32 cast happens inside the fused reductions.
+    m = jnp.max(logits, axis=-1).astype(jnp.float32)
+    shifted = logits.astype(jnp.float32) - m[..., None]
+    logz = m + jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    label_logit = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    label_logit = label_logit.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - label_logit) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# batched prefill: one forward pass that also materializes decode state
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Dict, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            max_len: int, num_groups: int = 1,
+            last_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt through the stack once, returning (logits at
+    ``last_index`` (default: final position), decode cache).  The serving
+    engine's prefill — O(1) forward passes per request instead of O(S)
+    decode steps.  ``last_index`` (B,) selects the true prompt end when the
+    input is right-padded to a length bucket."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+        bsz, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard_act(x, "dp", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    if cfg.rope == "none":
+        x = x + _sinusoidal(positions if positions.ndim == 2 else positions[0],
+                            cfg.d_model).astype(x.dtype)
+
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    pad = max_len - s
+    assert pad >= 0, (max_len, s)
+    new_segments = []
+    for seg, seg_cfg in zip(params["segments"], cfg.resolved_segments()):
+        kind, count = seg_cfg
+
+        if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+            rope = blocks.rope_tables(cfg, positions)
+
+            def body(x_, layer_p, _kind=kind):
+                h = blocks.apply_norm(layer_p["ln1"], cfg, x_)
+                q, k, v = blocks._qkv(layer_p["attn"], cfg, h, rope)
+                out = blocks.flash_attention(q, k, v, causal=True)
+                y = jnp.einsum("bshk,hkd->bsd", out,
+                               layer_p["attn"]["wo"].astype(x_.dtype),
+                               preferred_element_type=blocks._reduce_pe(cfg))
+                x2 = x_ + y.astype(x_.dtype)
+                h2 = blocks.apply_norm(layer_p["ln2"], cfg, x2)
+                if _kind == "attn_moe":
+                    mo, _ = blocks.moe_fwd(layer_p["moe"], cfg, h2, num_groups)
+                    x2 = x2 + mo
+                else:
+                    x2 = x2 + blocks.mlp_fwd(layer_p["mlp"], cfg, h2)
+                kc = jnp.pad(k.astype(jnp.bfloat16),
+                             ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v.astype(jnp.bfloat16),
+                             ((0, 0), (0, pad), (0, 0), (0, 0)))
+                return x2, (kc, vc)
+
+            if kind == "shared_attn":
+                ks, vs = [], []
+                for _ in range(count):
+                    x, (kc, vc) = body(x, params["shared"])
+                    ks.append(kc[None])
+                    vs.append(vc[None])
+                new_segments.append({"k": jnp.concatenate(ks, 0),
+                                     "v": jnp.concatenate(vs, 0)})
+            else:
+                x, (ks, vs) = jax.lax.scan(body, x, seg["layers"])
+                new_segments.append({"k": ks, "v": vs})
+        elif kind in ("mamba2", "mlstm", "slstm"):
+            def body(x_, layer_p, _kind=kind):
+                h = blocks.apply_norm(layer_p["ln"], cfg, x_)
+                fwd = {"mamba2": ssm.mamba2_fwd, "mlstm": ssm.mlstm_fwd,
+                       "slstm": ssm.slstm_fwd}[_kind]
+                # chunked-parallel pass that ALSO emits the final recurrent
+                # state (prefill = parallel form + state handoff to decode)
+                out, st = fwd(layer_p["mixer"], cfg, h, return_state=True)
+                return x_ + out, st
+
+            x, sts = jax.lax.scan(body, x, seg["layers"])
+            new_segments.append(sts)
+        elif kind == "fftconv_mlp":
+            def body(x_, inp):
+                layer_p, _ = inp
+                h = blocks.apply_norm(layer_p["ln1"], cfg, x_)
+                vg = h @ layer_p["mix"]["w_in"].astype(h.dtype)
+                v, _ = jnp.split(vg, 2, axis=-1)
+                x2, _, _ = _block_fwd(cfg, "fftconv_mlp", layer_p, x_,
+                                      positions, None, num_groups)
+                hist = jnp.pad(v.astype(jnp.bfloat16),
+                               ((0, 0), (0, pad), (0, 0)))
+                return x2, hist
+            x, hists = jax.lax.scan(
+                body, x, (seg["layers"], jnp.zeros((count,))))
+            new_segments.append({"v_hist": hists})
+        else:
+            raise ValueError(kind)
+
+    x = blocks.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if last_index is None:
+        x_last = x[:, -1:, :]
+        cache_len = jnp.full((bsz,), s, jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(
+            x, last_index[:, None, None].astype(jnp.int32), axis=1)
+        cache_len = last_index.astype(jnp.int32) + 1
+    logits = (x_last @ head.astype(dt)).astype(jnp.float32)
+    logits = _mask_pad_vocab(cfg, logits)
+    cache = {"len": cache_len, "segments": new_segments}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Stacked per-segment decode state."""
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32),
+                             "segments": []}
+
+    def stack(tree, count):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), tree)
+
+    for kind, count in cfg.resolved_segments():
+        if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+            seg = {"k": jnp.zeros((count, batch, max_len, kv, hd), jnp.bfloat16),
+                   "v": jnp.zeros((count, batch, max_len, kv, hd), jnp.bfloat16)}
+        elif kind == "mamba2":
+            seg = stack(ssm.mamba2_init_state(cfg, batch), count)
+        elif kind == "mlstm":
+            seg = stack(ssm.mlstm_init_state(cfg, batch), count)
+        elif kind == "slstm":
+            seg = stack(ssm.slstm_init_state(cfg, batch), count)
+        elif kind == "fftconv_mlp":
+            seg = {"v_hist": jnp.zeros((count, batch, max_len, cfg.d_model),
+                                       jnp.bfloat16)}
+        else:
+            seg = {}
+        cache["segments"].append(seg)
+    return cache
+
+
+def decode_step(params: Dict, cfg: ArchConfig, cache: Dict[str, Any],
+                batch: Dict[str, jax.Array],
+                num_groups: int = 1) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One new token per sequence. batch: {"tokens": (B,1)} or
+    {"embeds": (B,1,d)}; returns (logits (B,1,V), new cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+        bsz = x.shape[0]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+        bsz = batch["tokens"].shape[0]
+    positions = cache["len"][:, None]                           # (B, 1)
+    if cfg.rope == "none":
+        x = x + _sinusoidal(positions, cfg.d_model).astype(x.dtype)
+
+    new_segments = []
+    for seg_p, seg_c, seg_cfg in zip(params["segments"], cache["segments"],
+                                     cfg.resolved_segments()):
+        kind, count = seg_cfg
+        if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+            layer_cache = {"k": seg_c["k"], "v": seg_c["v"], "len": cache["len"]}
+            pstack = params["shared"] if kind == "shared_attn" else seg_p["layers"]
+            if kind == "shared_attn":
+                # one occurrence per segment entry; params shared
+                lc = {"k": seg_c["k"][0], "v": seg_c["v"][0], "len": cache["len"]}
+                x, nc, _ = _block_fwd(cfg, kind, pstack, x, positions, lc,
+                                      num_groups)
+                new_segments.append({"k": nc["k"][None], "v": nc["v"][None]})
+                continue
+
+            def body(x_, inp, _kind=kind):
+                layer_p, kc, vc = inp
+                lc = {"k": kc, "v": vc, "len": cache["len"]}
+                x2, nc, _ = _block_fwd(cfg, _kind, layer_p, x_, positions,
+                                       lc, num_groups)
+                return x2, (nc["k"], nc["v"])
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (pstack, seg_c["k"], seg_c["v"]),
+                unroll=_scan_unroll())
+            new_segments.append({"k": ks, "v": vs})
+        elif kind in ("mamba2", "mlstm", "slstm"):
+            def body(x_, inp, _kind=kind):
+                layer_p, st = inp
+                x2, ns, _ = _block_fwd(cfg, _kind, layer_p, x_, positions,
+                                       st, num_groups)
+                return x2, ns
+            x, ns = jax.lax.scan(body, x, (seg_p["layers"], seg_c),
+                                 unroll=_scan_unroll())
+            new_segments.append(ns)
+        elif kind == "fftconv_mlp":
+            def body(x_, inp):
+                layer_p, hist = inp
+                h = blocks.apply_norm(layer_p["ln1"], cfg, x_)
+                mix, nh = blocks.fftconv_decode(layer_p["mix"], cfg, h, hist,
+                                                cache["len"])
+                x2 = x_ + mix
+                h2 = blocks.apply_norm(layer_p["ln2"], cfg, x2)
+                return x2 + blocks.mlp_fwd(layer_p["mlp"], cfg, h2), nh
+            x, nh = jax.lax.scan(body, x, (seg_p["layers"], seg_c["v_hist"]),
+                                 unroll=_scan_unroll())
+            new_segments.append({"v_hist": nh})
+        else:
+            raise ValueError(f"decode unsupported for segment kind {kind!r}")
+
+    x = blocks.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    logits = _mask_pad_vocab(cfg, logits)
+    new_cache = {"len": cache["len"] + 1, "segments": new_segments}
+    return logits, new_cache

@@ -1,0 +1,121 @@
+"""Parameter metadata: one tree declares shape, init, and logical sharding.
+
+Logical axes ("fsdp", "tp", "expert", None per dim) are mapped to physical
+mesh axes by a rule table at launch time, so the same model definition runs
+on the single-pod (data, model) mesh, the multi-pod (pod, data, model) mesh,
+or a single CPU device (rules = {}).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"              # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _map_tree(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_meta)
+
+
+def init_tree(meta_tree, key: jax.Array):
+    """Materialize a parameter tree from metadata."""
+    leaves, treedef = jax.tree_util.tree_flatten(meta_tree, is_leaf=is_meta)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(meta: ParamMeta, k):
+        if meta.init == "zeros":
+            return jnp.zeros(meta.shape, meta.dtype)
+        if meta.init == "ones":
+            return jnp.ones(meta.shape, meta.dtype)
+        return (jax.random.normal(k, meta.shape, jnp.float32)
+                * meta.scale).astype(meta.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(m, k) for m, k in zip(leaves, keys)])
+
+
+def abstract_tree(meta_tree):
+    """ShapeDtypeStruct tree (for dry-runs: no allocation)."""
+    return _map_tree(lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), meta_tree)
+
+
+def pspec_tree(meta_tree, rules: Dict[str, Any]):
+    """PartitionSpec tree via logical->physical axis rules.
+
+    rules example: {"fsdp": ("pod", "data"), "tp": "model", "expert": "model"}
+    Logical names missing from the table are replicated.
+    """
+    def spec(meta: ParamMeta):
+        return P(*[rules.get(ax) if ax is not None else None
+                   for ax in meta.logical])
+    return _map_tree(spec, meta_tree)
+
+
+def param_count(meta_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(meta_tree, is_leaf=is_meta)
+    total = 0
+    for m in leaves:
+        c = 1
+        for s in m.shape:
+            c *= s
+        total += c
+    return total
+
+
+# ---------------------------------------------------------------------------
+# ambient mesh + rules for activation sharding constraints
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Optional[jax.sharding.Mesh], rules: Dict[str, Any]):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axes; no-op without a mesh."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or ctx[0] is None:
+        return x
+    mesh, rules = ctx
+    spec = P(*[rules.get(ax) if ax is not None else None for ax in logical])
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def current_rules() -> Dict[str, Any]:
+    ctx = getattr(_CTX, "val", None)
+    return ctx[1] if ctx else {}
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    ctx = getattr(_CTX, "val", None)
+    return ctx[0] if ctx else None

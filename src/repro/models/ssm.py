@@ -1,0 +1,341 @@
+"""Recurrent sequence mixers: Mamba2 (SSD), xLSTM (mLSTM + sLSTM).
+
+All linear-recurrent mixers share one chunked-parallel core:
+
+    S_t = a_t * S_{t-1} + k_t v_t^T          (state: dk x dv per head)
+    y_t = q_t . S_t
+
+computed per chunk with pairwise-decay einsums (matmul-structured, MXU
+friendly) and a lax.scan carrying the inter-chunk state — O(L) memory, O(1)
+decode.  Mamba2 folds dt into v and uses (C, B) as (q, k); mLSTM folds the
+exponential input gate into k and appends a normalizer column to v.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamMeta, shard_act
+
+# ---------------------------------------------------------------------------
+# shared chunked gated linear attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_gla(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array,
+                state: Optional[jax.Array] = None, chunk: int = 128
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k (B,L,H,dk); v (B,L,H,dv); log_a (B,L,H) log-decay (<= 0).
+
+    Returns y (B,L,H,dv) and final state (B,H,dk,dv).
+    """
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, l)
+    while l % chunk:
+        chunk -= 1
+    nc = l // chunk
+
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, dk), 1, 0).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, dk), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, dv), 1, 0).astype(jnp.float32)
+    lac = jnp.moveaxis(log_a.reshape(b, nc, chunk, h), 1, 0).astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]                       # (Q, Q)
+
+    def step(s, inp):
+        qi, ki, vi, la = inp                                    # (B,Q,H,*)
+        cl = jnp.cumsum(la, axis=1)                             # inclusive
+        # intra-chunk: pairwise decay exp(cl_i - cl_j), causal
+        dec = cl[:, :, None, :] - cl[:, None, :, :]             # (B,Q,Q,H)
+        dec = jnp.where(causal[None, :, :, None], dec, -jnp.inf)
+        att = jnp.einsum("bihd,bjhd->bijh", qi, ki) * jnp.exp(dec)
+        y = jnp.einsum("bijh,bjhv->bihv", att, vi)
+        # carry-in: q_i . S_prev decayed by exp(cl_i)
+        y = y + jnp.einsum("bihd,bhdv->bihv", qi * jnp.exp(cl)[..., None], s)
+        # state update: S' = exp(cl_last) S + sum_j exp(cl_last - cl_j) k_j v_j
+        w = jnp.exp(cl[:, -1:, :] - cl)                         # (B,Q,H)
+        s_new = s * jnp.exp(cl[:, -1])[:, :, None, None]        # (B,H,1,1)
+        s_new = s_new + jnp.einsum("bjhd,bjh,bjhv->bhdv", ki, w, vi)
+        return s_new, y
+
+    state, ys = jax.lax.scan(step, state, (qc, kc, vc, lac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, dv)
+    return y, state
+
+
+def gla_decode_step(q: jax.Array, k: jax.Array, v: jax.Array, a: jax.Array,
+                    state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token state update. q,k (B,H,dk); v (B,H,dv); a (B,H) decay."""
+    state = state * a[..., None, None] + jnp.einsum("bhd,bhv->bhdv", k, v)
+    y = jnp.einsum("bhd,bhdv->bhv", q, state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nheads = di // cfg.ssm_head_dim
+    return di, nheads, cfg.ssm_state
+
+
+def mamba2_meta(cfg: ArchConfig) -> Dict[str, ParamMeta]:
+    d = cfg.d_model
+    di, nh, n = mamba2_dims(cfg)
+    kc = cfg.conv_kernel
+    return {
+        "in_proj": ParamMeta((d, 2 * di + 2 * n + nh), ("fsdp", "tp")),
+        "conv_w": ParamMeta((di + 2 * n, kc), ("tp", None), scale=0.5),
+        "a_log": ParamMeta((nh,), ("tp",), init="zeros"),
+        "dt_bias": ParamMeta((nh,), ("tp",), init="zeros"),
+        "d_skip": ParamMeta((nh,), ("tp",), init="ones"),
+        "norm": ParamMeta((di,), (None,), init="ones"),
+        "out_proj": ParamMeta((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along axis 1. x (B, L, C); w (C, K)."""
+    k = w.shape[-1]
+    if state is not None:                                       # decode: L == 1
+        window = jnp.concatenate([state, x], axis=1)            # (B, K, C)
+        y = jnp.einsum("bkc,ck->bc", window, w)[:, None, :]
+        return y, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windows: y_t = sum_i x_{t-K+1+i} * w[:, i]
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + pad[:, i:i + x.shape[1], :] * w.T[None, i, :][None]
+    new_state = pad[:, -(k - 1):, :]
+    return y, new_state
+
+
+def mamba2_fwd(p: Dict, cfg: ArchConfig, x: jax.Array,
+               state: Optional[Dict] = None, chunk: int = 128,
+               return_state: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B, L, d). state: {"conv": (B,K-1,C), "ssd": (B,H,N,P)} for decode."""
+    b, l, d = x.shape
+    di, nh, n = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xin, bc, dt_pre = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * n], -1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)               # (B,L,di+2n)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in.astype(jnp.float32), p["conv_w"].astype(jnp.float32), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,L,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+    log_decay = a[None, None, :] * dt                           # (B,L,H) <= 0
+
+    xh = xc.reshape(b, l, nh, hd)
+    v = xh * dt[..., None]                                      # fold dt
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, l, nh, n))    # shared B
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, l, nh, n))
+
+    if state is None:
+        y, ssd_state = chunked_gla(q, k, v, log_decay, chunk=chunk)
+        new_state = ({"conv": new_conv, "ssd": ssd_state}
+                     if return_state else None)
+    else:
+        yq, ssd_state = gla_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], jnp.exp(log_decay[:, 0]), state["ssd"])
+        y = yq[:, None]
+        new_state = {"conv": new_conv, "ssd": ssd_state}
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, di)
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+    out = (y.astype(dt_) @ p["out_proj"].astype(dt_))
+    if state is None and not return_state:
+        return shard_act(out, "dp", None, None), None
+    return out, new_state
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    di, nh, n = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * n), jnp.float32),
+        "ssd": jnp.zeros((batch, nh, n, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_meta(cfg: ArchConfig) -> Dict[str, ParamMeta]:
+    """xLSTM mLSTM block, projection factor 2.  q/k are PER-HEAD (block-
+    diagonal) projections of the up-projected branch and v IS that branch —
+    this is what keeps xlstm-1.3b at ~1.3B params (dense du x du qkv would
+    triple it)."""
+    d = cfg.d_model
+    du = 2 * d                                                  # proj factor 2
+    h = cfg.num_heads
+    dh = du // h
+    return {
+        "w_up": ParamMeta((d, du), ("fsdp", "tp")),
+        "w_gate": ParamMeta((d, du), ("fsdp", "tp")),
+        "wq": ParamMeta((h, dh, dh), ("tp", None, None)),
+        "wk": ParamMeta((h, dh, dh), ("tp", None, None)),
+        "wi": ParamMeta((d, h), ("fsdp", "tp"), scale=0.01),
+        "wf": ParamMeta((d, h), ("fsdp", "tp"), scale=0.01),
+        "bi": ParamMeta((h,), ("tp",), init="zeros"),
+        "bf": ParamMeta((h,), ("tp",), init="ones", scale=3.0),
+        "norm": ParamMeta((du,), (None,), init="ones"),
+        "w_down": ParamMeta((du, d), ("tp", "fsdp")),
+    }
+
+
+def mlstm_fwd(p: Dict, cfg: ArchConfig, x: jax.Array,
+              state: Optional[Dict] = None, chunk: int = 128,
+              return_state: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Chunked-parallel mLSTM: exponential input gate folded into k, sigmoid
+    forget gate as the decay, normalizer as an extra value column."""
+    b, l, d = x.shape
+    h = cfg.num_heads
+    du = 2 * d
+    dh = du // h
+    dt_ = x.dtype
+
+    u = x @ p["w_up"].astype(dt_)
+    gate = x @ p["w_gate"].astype(dt_)
+    ur = u.reshape(b, l, h, dh)
+    q = jnp.einsum("bshd,hde->bshe", ur, p["wq"].astype(dt_)) / math.sqrt(dh)
+    k = jnp.einsum("bshd,hde->bshe", ur, p["wk"].astype(dt_))
+    v = ur
+
+    xf = x.astype(jnp.float32)
+    ig = xf @ p["wi"].astype(jnp.float32) + p["bi"].astype(jnp.float32)
+    fg = xf @ p["wf"].astype(jnp.float32) + p["bf"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fg)                              # (B,L,H)
+    i_gate = jnp.exp(jnp.minimum(ig, 8.0))                      # bounded exp gate
+
+    kf = k.astype(jnp.float32) * i_gate[..., None]
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, l, h, 1), jnp.float32)], -1)
+
+    if state is None:
+        y_aug, s_new = chunked_gla(q.astype(jnp.float32), kf, v_aug, log_f,
+                                   chunk=chunk)
+        new_state = {"mlstm": s_new} if return_state else None
+    else:
+        y1, s_new = gla_decode_step(q[:, 0].astype(jnp.float32), kf[:, 0],
+                                    v_aug[:, 0], jnp.exp(log_f[:, 0]),
+                                    state["mlstm"])
+        y_aug = y1[:, None]
+        new_state = {"mlstm": s_new}
+
+    y_num, y_den = y_aug[..., :dh], y_aug[..., dh:]
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)
+    y = y.reshape(b, l, du)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(gate)
+    out = y @ p["w_down"].astype(dt_)
+    if state is None and not return_state:
+        return shard_act(out, "dp", None, None), None
+    return out, new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    h = cfg.num_heads
+    dh = 2 * cfg.d_model // h
+    return {"mlstm": jnp.zeros((batch, h, dh, dh + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory, true recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_meta(cfg: ArchConfig) -> Dict[str, ParamMeta]:
+    d = cfg.d_model
+    h = cfg.slstm_heads
+    dh = d // h
+    return {
+        "w_gates": ParamMeta((d, 4, h, dh), ("fsdp", None, "tp", None)),
+        "r_gates": ParamMeta((4, h, dh, dh), (None, "tp", None, None),
+                             scale=0.01),
+        "b_gates": ParamMeta((4, h, dh), (None, "tp", None), init="zeros"),
+        "w_out": ParamMeta((d, d), ("fsdp", "tp")),
+    }
+
+
+def _slstm_cell(p, wx_t, carry):
+    """wx_t (B,4,H,dh) precomputed input contributions; carry (c,n,h,m)."""
+    c, n, hprev, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, p["r_gates"].astype(jnp.float32))
+    pre = wx_t + rec + p["b_gates"].astype(jnp.float32)[None]
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1]
+    ft = pre[:, 2]
+    ot = jax.nn.sigmoid(pre[:, 3])
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_fwd(p: Dict, cfg: ArchConfig, x: jax.Array,
+              state: Optional[Dict] = None,
+              return_state: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    b, l, d = x.shape
+    h = cfg.slstm_heads
+    dh = d // h
+    dt_ = x.dtype
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32),
+                    p["w_gates"].astype(jnp.float32))           # (B,L,4,H,dh)
+
+    if state is None:
+        zero = jnp.zeros((b, h, dh), jnp.float32)
+        carry0 = (zero, zero, zero, jnp.full((b, h, dh), -1e30, jnp.float32))
+    else:
+        carry0 = state["slstm"]
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, wx_t, carry)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, l, d)
+    out = y.astype(dt_) @ p["w_out"].astype(dt_)
+    if state is None and not return_state:
+        return shard_act(out, "dp", None, None), None
+    return out, {"slstm": carry}
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    h = cfg.slstm_heads
+    dh = cfg.d_model // h
+    zero = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"slstm": (zero, zero, zero,
+                      jnp.full((batch, h, dh), -1e30, jnp.float32))}

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule, opt_meta
+from .compress import compressed_psum, dequantize_int8, quantize_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "opt_meta", "quantize_int8", "dequantize_int8", "compressed_psum"]

@@ -1,0 +1,6 @@
+from .rules import (make_rules, logical_shardings, sanitize_spec,
+                    sanitized_shardings)
+from .pipeline import pipeline_forward, pipeline_stages
+
+__all__ = ["make_rules", "logical_shardings", "sanitize_spec",
+           "sanitized_shardings", "pipeline_forward", "pipeline_stages"]

@@ -1,0 +1,93 @@
+"""Logical-axis -> mesh-axis rule tables.
+
+One model definition, three deployments:
+  * 1 CPU device      : {}                        (everything replicated)
+  * single pod (d, m)  : fsdp/dp -> data, tp/expert -> model
+  * multi-pod (p, d, m): fsdp/dp -> (pod, data)   (ZeRO across all DP chips)
+
+"dp" shards batch-like activation dims; "fsdp" shards weight dims (gathered
+on use by GSPMD); "tp" is tensor parallelism; "expert" places MoE experts;
+"sp" is the sequence/FFT slab axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.params import pspec_tree
+
+
+def make_rules(mesh: jax.sharding.Mesh, pipeline_pods: bool = False,
+               profile: str = "train") -> Dict[str, Any]:
+    """profile: "train" gathers FSDP-sharded weights on use (ZeRO);
+    "serve" keeps MoE expert weights stationary (d_ff sharded over data,
+    contraction psums activations) — far fewer collective bytes when there
+    is no optimizer to shard for."""
+    axes = mesh.axis_names
+    if "pod" in axes:
+        dp = ("data",) if pipeline_pods else ("pod", "data")
+        dp = dp if len(dp) > 1 else dp[0]
+        rules = {"fsdp": dp, "dp": dp, "tp": "model", "expert": "model",
+                 "sp": "data", "pipe": "pod"}
+    elif "data" in axes:
+        rules = {"fsdp": "data", "dp": "data", "tp": "model",
+                 "expert": "model", "sp": "data"}
+    else:
+        return {}
+    if profile == "serve":
+        # weight-stationary MoE: experts live on the model axis, no FSDP
+        # sharding of d/ff -> zero weight-gather collectives at inference
+        rules["moe_d"] = None
+        rules["moe_f"] = None
+    else:
+        rules["moe_d"] = rules["fsdp"]
+        rules["moe_f"] = None
+    return {k: v for k, v in rules.items() if v is not None}
+
+
+def _axis_size(mesh: jax.sharding.Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def sanitize_spec(spec: P, shape, mesh: jax.sharding.Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dimension (e.g. 4 mLSTM
+    heads cannot shard over 16-way tensor parallelism — replicate instead)."""
+    out = []
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        out.append(ax if (size > 0 and shape[i] % size == 0
+                          and shape[i] >= size) else None)
+    return P(*out)
+
+
+def logical_shardings(mesh: jax.sharding.Mesh, meta_tree, rules: Dict):
+    """NamedSharding tree for a ParamMeta tree (divisibility-sanitized)."""
+    from repro.models.params import ParamMeta, is_meta
+    specs = pspec_tree(meta_tree, rules)
+
+    def build(meta: ParamMeta, spec: P):
+        return NamedSharding(mesh, sanitize_spec(spec, meta.shape, mesh))
+
+    return jax.tree_util.tree_map(build, meta_tree, specs, is_leaf=is_meta)
+
+
+def sanitized_shardings(mesh: jax.sharding.Mesh, abstract_tree, spec_tree):
+    """NamedSharding tree for a ShapeDtypeStruct tree + PartitionSpec tree."""
+    def build(abs_, spec):
+        return NamedSharding(mesh, sanitize_spec(spec, abs_.shape, mesh))
+    return jax.tree_util.tree_map(
+        build, abstract_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape"))

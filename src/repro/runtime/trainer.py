@@ -1,0 +1,200 @@
+"""Fault-tolerant training driver.
+
+Responsibilities at fleet scale, all exercised in tests on this container:
+
+* build mesh + sharding rules, jit the train step with donated state
+* checkpoint every ``ckpt_every`` steps (async, atomic, keep-N)
+* restart: resume bit-identically from the latest checkpoint (params, Adam
+  moments, data-iterator step)
+* elastic restart: restore onto a *different* mesh (device count change)
+* straggler watchdog: per-step wall-time EWMA; steps slower than
+  ``straggler_factor`` x the EWMA are logged as straggler events (on a real
+  fleet this feeds the remediation controller that cordons the slow host —
+  here the hook records and continues, per the simulation guidance)
+* preemption hook: REPRO_PREEMPT_AT=<step> raises after the checkpoint at
+  that step, simulating a SIGTERM'd worker for the restart tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticDataset, batch_specs
+from repro.models import lm
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.params import sharding_rules
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_meta
+from repro.parallel import make_rules, logical_shardings
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_n: int = 3
+    straggler_factor: float = 3.0
+    log_every: int = 10
+    seed: int = 0
+    # gradient accumulation: split the global batch into this many
+    # microbatches, scanning loss+grad and summing — same numerics as one
+    # big batch, 1/n the activation memory (the standard big-model lever
+    # alongside remat/FSDP)
+    grad_accum: int = 1
+
+
+class Trainer:
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 mesh: Optional[jax.sharding.Mesh], tcfg: TrainerConfig,
+                 ocfg: Optional[AdamWConfig] = None):
+        self.arch = arch
+        self.shape = shape
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.ocfg = ocfg or AdamWConfig()
+        self.rules = make_rules(mesh) if mesh is not None else {}
+        self.data = SyntheticDataset(arch, shape, seed=tcfg.seed)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_n=tcfg.keep_n)
+        self.straggler_events = []
+        self._ewma = None
+        self._build()
+
+    # -- step construction ----------------------------------------------------
+
+    def _build(self):
+        arch, mesh, rules = self.arch, self.mesh, self.rules
+        meta = lm.model_meta(arch)
+        self.meta = meta
+        self.opt_meta = opt_meta(meta)
+        num_groups = 1
+        if mesh is not None:
+            dp = rules.get("dp")
+            axes = (dp,) if isinstance(dp, str) else (dp or ())
+            for a in axes:
+                num_groups *= mesh.shape[a]
+        self.num_groups = max(num_groups, 1)
+
+        accum = max(self.tcfg.grad_accum, 1)
+
+        def loss_and_grad(params, batch):
+            with sharding_rules(mesh, rules):
+                return jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                    params, arch, batch, self.num_groups)
+
+        def train_step(params, opt_state, batch):
+            if accum == 1:
+                (loss, metrics), grads = loss_and_grad(params, batch)
+            else:
+                mb = {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+                      if k != "positions" else
+                      v.reshape(v.shape[:1] + (accum, v.shape[1] // accum)
+                                + v.shape[2:]).swapaxes(0, 1)
+                      for k, v in batch.items()}
+
+                def body(carry, micro):
+                    g_sum, l_sum = carry
+                    (l, _), g = loss_and_grad(params, micro)
+                    g_sum = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), g_sum, g)
+                    return (g_sum, l_sum + l), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(
+                    body, (g0, jnp.zeros((), jnp.float32)), mb)
+                scale = 1.0 / accum
+                grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+                loss = loss * scale
+                metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+            params, opt_state, opt_metrics = adamw_update(
+                self.ocfg, grads, params, opt_state)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return params, opt_state, metrics
+
+        if mesh is not None:
+            pspecs = logical_shardings(mesh, meta, rules)
+            ospecs = logical_shardings(mesh, self.opt_meta, rules)
+            bspecs = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                batch_specs(arch, self.shape, rules),
+                is_leaf=lambda x: isinstance(x, P))
+            self.param_shardings = pspecs
+            self.opt_shardings = ospecs
+            self.step_fn = jax.jit(
+                train_step,
+                in_shardings=(pspecs, ospecs, bspecs),
+                out_shardings=(pspecs, ospecs, None),
+                donate_argnums=(0, 1))
+        else:
+            self.param_shardings = None
+            self.opt_shardings = None
+            self.step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # -- state init / restore ---------------------------------------------------
+
+    def init_state(self):
+        params = lm.init_params(self.arch, jax.random.key(self.tcfg.seed))
+        if self.mesh is not None:
+            params = jax.tree_util.tree_map(
+                jax.device_put, params, self.param_shardings)
+        opt_state = adamw_init(params)
+        if self.mesh is not None:
+            opt_state = jax.tree_util.tree_map(
+                jax.device_put, opt_state, self.opt_shardings)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        step = self.ckpt.latest_step()
+        if step is None:
+            return self.init_state()
+        params0 = lm.init_params(self.arch, jax.random.key(self.tcfg.seed))
+        opt0 = adamw_init(params0)
+        sh = None
+        if self.mesh is not None:
+            sh = {"params": self.param_shardings, "opt": self.opt_shardings}
+        (restored), extra = self.ckpt.restore(
+            step, {"params": params0, "opt": opt0}, sh)
+        return restored["params"], restored["opt"], extra.get("data_step", step)
+
+    # -- loop ---------------------------------------------------------------------
+
+    def run(self, num_steps: int):
+        params, opt_state, start = self.restore_or_init()
+        preempt_at = int(os.environ.get("REPRO_PREEMPT_AT", "-1"))
+        history = []
+        for step in range(start, num_steps):
+            t0 = time.perf_counter()
+            if self.mesh is not None:
+                batch = self.data.sharded_batch_at(step, self.mesh, self.rules)
+            else:
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.data.batch_at(step).items()}
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._watchdog(step, dt)
+            history.append({k: float(v) for k, v in metrics.items()})
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == num_steps:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt": opt_state},
+                               extra={"data_step": step + 1})
+            if preempt_at >= 0 and step + 1 >= preempt_at:
+                self.ckpt.wait()
+                raise SystemExit(f"simulated preemption at step {step + 1}")
+        self.ckpt.wait()
+        return params, opt_state, history
+
+    def _watchdog(self, step: int, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+        if dt > self.tcfg.straggler_factor * self._ewma and step > 2:
+            self.straggler_events.append((step, dt, self._ewma))
+        self._ewma = 0.9 * self._ewma + 0.1 * dt

@@ -1,0 +1,269 @@
+"""Multi-device worker, launched by test_distributed.py in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the device-count override
+is process-local — it must never leak into the main pytest process).
+
+Each check prints "PASS <name>"; any exception fails the subprocess.
+"""
+
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get(
+    "XLA_FLAGS", ""), "launch me via test_distributed.py"
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import dfft, fftconv, plan          # noqa: E402
+from repro.models import lm                         # noqa: E402
+from repro.optim import compressed_psum             # noqa: E402
+from repro.parallel import pipeline_forward         # noqa: E402
+
+RNG = np.random.default_rng(0)
+PLANNER = plan.Planner(backends=("jnp",))
+
+
+def check_fft2_slab():
+    mesh = jax.make_mesh((8,), ("fft",))
+    n, m = 64, 512      # m chosen so the pipelined exchange REALLY chunks
+    x = RNG.standard_normal((n, m)).astype(np.float32)
+    ref = np.fft.rfft2(x)
+    xs = jax.device_put(x, NamedSharding(mesh, P("fft", None)))
+    for comm in dfft.COMM_BACKENDS:
+        for chunks in (1, 3, 4):
+            re, im = dfft.fft2_slab(xs, mesh, "fft", PLANNER, comm=comm,
+                                    chunks=chunks)
+            z = np.asarray(re)[:, :m // 2 + 1] \
+                + 1j * np.asarray(im)[:, :m // 2 + 1]
+            err = np.max(np.abs(z - ref)) / np.max(np.abs(ref))
+            assert err < 1e-4, (comm, chunks, err)
+            if comm != "pipelined":
+                break
+        # distribution invariance: distributed == single-device oracle
+    back = dfft.ifft2_slab(dfft.fft2_slab(xs, mesh, "fft", PLANNER),
+                           mesh, "fft", m, PLANNER)
+    assert np.max(np.abs(np.asarray(back) - x)) < 1e-4
+    # permuted-order columns (digit-transpose elision) roundtrip
+    x2 = RNG.standard_normal((256, 256)).astype(np.float32)
+    xs2 = jax.device_put(x2, NamedSharding(mesh, P("fft", None)))
+    c2 = dfft.fft2_slab(xs2, mesh, "fft", PLANNER, permuted_cols=True)
+    back2 = dfft.ifft2_slab(c2, mesh, "fft", 256, PLANNER, permuted_cols=True)
+    assert np.max(np.abs(np.asarray(back2) - x2)) < 1e-4
+    # transposed-spectrum path (the §Perf-A winning config)
+    ct = dfft.fft2_slab(xs, mesh, "fft", PLANNER, keep_transposed=True)
+    backt = dfft.ifft2_slab(ct, mesh, "fft", m, PLANNER, from_transposed=True)
+    assert np.max(np.abs(np.asarray(backt) - x)) < 1e-4
+    print("PASS fft2_slab")
+
+
+def check_fft3_pencil():
+    mesh = jax.make_mesh((4, 2), ("mx", "my"))
+    x = (RNG.standard_normal((16, 32, 64)).astype(np.float32)
+         + 1j * RNG.standard_normal((16, 32, 64)).astype(np.float32))
+    pair = (jax.device_put(np.real(x).astype(np.float32),
+                           NamedSharding(mesh, P("mx", "my", None))),
+            jax.device_put(np.imag(x).astype(np.float32),
+                           NamedSharding(mesh, P("mx", "my", None))))
+    rr, ri = dfft.fft3_pencil(pair, mesh, ("mx", "my"), PLANNER)
+    ref = np.fft.fftn(x)
+    err = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref)) \
+        / np.max(np.abs(ref))
+    assert err < 1e-4, err
+    print("PASS fft3_pencil")
+
+
+def check_fftconv_seq_sharded():
+    mesh = jax.make_mesh((8,), ("sp",))
+    b, l, d = 2, 512, 4
+    u = RNG.standard_normal((b, l, d)).astype(np.float32)
+    k = (RNG.standard_normal((d, l))
+         * np.exp(-np.arange(l) / 32)[None]).astype(np.float32)
+    nf = 2 * l
+    ref = np.fft.irfft(
+        np.fft.rfft(np.pad(u, ((0, 0), (0, nf - l), (0, 0))), axis=1)
+        * np.fft.rfft(np.pad(k.T[None], ((0, 0), (0, nf - l), (0, 0))), axis=1),
+        axis=1, n=nf)[:, :l, :]
+    us = jax.device_put(u, NamedSharding(mesh, P(None, "sp", None)))
+    y = fftconv.fft_conv_seq_sharded(us, jnp.asarray(k), mesh, "sp", PLANNER)
+    err = np.max(np.abs(np.asarray(y) - ref)) / np.max(np.abs(ref))
+    assert err < 1e-4, err
+    print("PASS fftconv_seq_sharded")
+
+
+def check_compressed_psum():
+    mesh = jax.make_mesh((8,), ("pod",))
+    xs = RNG.standard_normal((8, 1000)).astype(np.float32)
+
+    def body(x):
+        out, err = compressed_psum(x[0], "pod")
+        return out[None], err[None]
+
+    out, err = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=P("pod", None),
+        out_specs=(P("pod", None), P("pod", None))))(xs)
+    ref = xs.sum(axis=0)
+    got = np.asarray(out)[0]
+    rel = np.abs(got - ref) / (np.abs(ref) + 1e-3)
+    assert np.median(rel) < 0.02, np.median(rel)
+    # error feedback residual is bounded by the quantization step
+    assert np.max(np.abs(np.asarray(err))) < 0.05
+    print("PASS compressed_psum")
+
+
+def check_pipeline_forward():
+    mesh = jax.make_mesh((4,), ("pod",))
+    m_mb, mb, d = 8, 4, 16
+    x = RNG.standard_normal((m_mb, mb, d)).astype(np.float32)
+    w = RNG.standard_normal((4, d, d)).astype(np.float32) * 0.3
+
+    def stage(wl, xin):                    # each stage: x @ w_stage
+        return jnp.tanh(xin @ wl[0])
+
+    def run(w_all, xin):
+        return pipeline_forward(stage, w_all, xin, "pod")
+
+    y = jax.jit(jax.shard_map(
+        run, mesh=mesh, in_specs=(P("pod", None, None), P(None, None, None)),
+        out_specs=P(None, None, None), check_vma=False))(w, x)
+    # reference: sequential stages
+    ref = x
+    for s in range(4):
+        ref = np.tanh(ref @ w[s])
+    err = np.max(np.abs(np.asarray(y) - ref))
+    assert err < 1e-5, err
+
+    # differentiability (GPipe backward through ppermute)
+    def loss(w_all):
+        return jnp.sum(jax.shard_map(
+            run, mesh=mesh, in_specs=(P("pod", None, None),
+                                      P(None, None, None)),
+            out_specs=P(None, None, None), check_vma=False)(w_all, x) ** 2)
+
+    g = jax.jit(jax.grad(loss))(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.abs(np.asarray(g)).sum() > 0
+    print("PASS pipeline_forward")
+
+
+def check_sharded_train_equivalence():
+    """4-device FSDP+TP train step == single-device step (GSPMD correctness)."""
+    from repro.configs import get_smoke_config
+    from repro.models.params import sharding_rules
+    from repro.parallel import make_rules, logical_shardings
+
+    cfg = get_smoke_config("granite_8b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    loss1 = float(lm.loss_fn(params, cfg, batch)[0])
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rules = make_rules(mesh)
+    pspecs = logical_shardings(mesh, lm.model_meta(cfg), rules)
+    params_sh = jax.tree_util.tree_map(jax.device_put, params, pspecs)
+
+    def sharded_loss(p, b):
+        with sharding_rules(mesh, rules):
+            return lm.loss_fn(p, cfg, b, num_groups=2)[0]
+
+    loss2 = float(jax.jit(sharded_loss)(params_sh, batch))
+    assert abs(loss1 - loss2) < 5e-3, (loss1, loss2)
+    print("PASS sharded_train_equivalence")
+
+
+def check_dryrun_cell_tiny():
+    """build_cell compiles on a small mesh (structure check for specs.py)."""
+    from repro.launch.specs import cache_pspecs
+    from repro.parallel import make_rules, sanitized_shardings
+    from repro.configs import get_smoke_config
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rules = make_rules(mesh)
+    for arch in ("granite_8b", "zamba2_7b", "xlstm_1_3b", "phi35_moe_42b"):
+        cfg = get_smoke_config(arch)
+        cache_abs = jax.eval_shape(lambda c=cfg: lm.init_cache(c, 8, 64))
+        specs = cache_pspecs(cfg, 8, mesh, rules)
+        sh = sanitized_shardings(mesh, cache_abs, specs)   # structure match
+        assert jax.tree_util.tree_structure(sh) == \
+            jax.tree_util.tree_structure(cache_abs)
+    print("PASS dryrun_cell_tiny")
+
+
+def check_pipelined_lm_equivalence():
+    """Pod-axis GPipe loss == plain loss (same params, same batch)."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.parallel import make_rules
+    from repro.parallel.pipelined_lm import (pipelined_loss_fn,
+                                             pipeline_param_shardings)
+
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"), num_layers=4)
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    ref = float(lm.loss_fn(params, cfg, batch)[0])
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = make_rules(mesh, pipeline_pods=True)
+    pspecs = pipeline_param_shardings(mesh, lm.model_meta(cfg), rules)
+    params_sh = jax.tree_util.tree_map(jax.device_put, params, pspecs)
+
+    loss = float(jax.jit(
+        lambda p, b: pipelined_loss_fn(p, cfg, b, mesh, rules,
+                                       num_microbatches=4)[0]
+    )(params_sh, batch))
+    assert abs(loss - ref) < 5e-3, (loss, ref)
+
+    # gradients flow through the pipeline (ppermute transpose)
+    g = jax.jit(jax.grad(
+        lambda p: pipelined_loss_fn(p, cfg, batch, mesh, rules,
+                                    num_microbatches=4)[0]))(params_sh)
+    gn = sum(float(jnp.sum(jnp.abs(l.astype(jnp.float32))))
+             for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    print("PASS pipelined_lm_equivalence")
+
+
+def check_serve_profile_equivalence():
+    """Weight-stationary serve layout (bf16 reduce, expert-resident weights)
+    computes the same loss as the training layout."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.params import sharding_rules
+    from repro.parallel import make_rules, logical_shardings
+
+    cfg = get_smoke_config("phi35_moe_42b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    ref = float(lm.loss_fn(params, cfg, batch)[0])
+
+    cfg_s = dataclasses.replace(cfg, reduce_dtype="bfloat16")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rules = make_rules(mesh, profile="serve")
+    pspecs = logical_shardings(mesh, lm.model_meta(cfg_s), rules)
+    params_sh = jax.tree_util.tree_map(jax.device_put, params, pspecs)
+
+    def f(p, b):
+        with sharding_rules(mesh, rules):
+            return lm.loss_fn(p, cfg_s, b, num_groups=4)[0]
+
+    got = float(jax.jit(f)(params_sh, batch))
+    assert abs(got - ref) < 2e-2, (got, ref)   # bf16 reductions: loose tol
+    print("PASS serve_profile_equivalence")
+
+
+if __name__ == "__main__":
+    check_fft2_slab()
+    check_fft3_pencil()
+    check_fftconv_seq_sharded()
+    check_compressed_psum()
+    check_pipeline_forward()
+    check_sharded_train_equivalence()
+    check_dryrun_cell_tiny()
+    check_pipelined_lm_equivalence()
+    check_serve_profile_equivalence()
+    print("ALL_DIST_OK")

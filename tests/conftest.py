@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device (dry-runs set it themselves in a
+# subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

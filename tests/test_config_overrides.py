@@ -1,0 +1,60 @@
+"""Config plumbing: remat policy, serve profile, padded vocab."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.models.lm import padded_vocab
+
+
+def test_padded_vocab_alignment():
+    cfg = get_smoke_config("granite_3_2b")       # vocab 515 -> 768
+    assert padded_vocab(cfg) % 256 == 0
+    assert padded_vocab(cfg) >= cfg.vocab_size
+
+
+def test_pad_columns_masked_in_logits():
+    cfg = get_smoke_config("granite_3_2b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    logits, _ = lm.forward(params, cfg, {"tokens": toks})
+    pad_region = np.asarray(logits[..., cfg.vocab_size:], np.float32)
+    assert (pad_region <= -1e29).all()
+
+
+def test_remat_policy_changes_graph_not_values():
+    cfg = get_smoke_config("granite_8b")
+    cfg_dots = dataclasses.replace(cfg, remat_policy="dots")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    g1 = jax.grad(lambda p: lm.loss_fn(p, cfg, batch)[0])(params)
+    g2 = jax.grad(lambda p: lm.loss_fn(p, cfg_dots, batch)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_param_dtype_bf16_meta():
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"),
+                              param_dtype="bfloat16")
+    from repro.models.params import abstract_tree
+    leaves = jax.tree_util.tree_leaves(abstract_tree(lm.model_meta(cfg)))
+    assert all(l.dtype == jnp.bfloat16 for l in leaves)
+
+
+def test_reduce_dtype_numerics_close():
+    cfg = get_smoke_config("granite_8b")
+    cfg_bf = dataclasses.replace(cfg, reduce_dtype="bfloat16")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    l1 = float(lm.loss_fn(params, cfg, {"tokens": toks, "labels": toks})[0])
+    l2 = float(lm.loss_fn(params, cfg_bf, {"tokens": toks, "labels": toks})[0])
+    assert abs(l1 - l2) < 5e-2

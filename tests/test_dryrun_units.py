@@ -1,0 +1,68 @@
+"""Dry-run machinery unit tests (no 512-device compile here)."""
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import (_shape_bytes, inner_scan_flops_correction,
+                                 model_flops, parse_collectives)
+from repro.configs import get_config
+from repro.models.config import SHAPES_BY_NAME
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = f32[16,4096]{1,0} all-gather(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%x), replica_groups=[2,16]<=[32], to_apply=%sum
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %a2a = f32[64,64]{1,0} all-to-all(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[32]{0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ignored = f32[4]{0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_bytes():
+    out, counts = parse_collectives(HLO_SAMPLE)
+    _, _, wire = parse_collectives(HLO_SAMPLE, with_wire=True)
+    # AGAS-style all-gather wire cost = result - operand
+    assert wire["all-gather"] == 16 * 4096 * 4 * 3 / 4
+    assert counts == {"all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+                      "all-to-all": 1, "collective-permute": 1}
+    assert out["all-gather"] == 16 * 4096 * 4 / 4     # result / group
+    assert out["all-reduce"] == 1024 * 2              # == result
+    assert out["reduce-scatter"] == 8 * 128 * 4 * 2   # result * group
+    assert out["all-to-all"] == 64 * 64 * 4
+    assert out["collective-permute"] == 32 * 4
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[2,2], bf16[8])") == 16 + 16
+
+
+def test_model_flops_moe_discounts_inactive_experts():
+    dense = model_flops(get_config("granite_8b"), SHAPES_BY_NAME["train_4k"])
+    moe = model_flops(get_config("phi35_moe_42b"), SHAPES_BY_NAME["train_4k"])
+    # phi3.5-moe has 42B params but only ~6.6B active
+    assert moe < 12e9 * 6 * 256 * 4096
+    assert dense > 7e9 * 6 * 256 * 4096
+
+
+def test_inner_scan_correction_positive_for_attention():
+    c = inner_scan_flops_correction(get_config("granite_8b"),
+                                    SHAPES_BY_NAME["prefill_32k"])
+    assert c > 0
+    # decode has no rolled inner scans
+    assert inner_scan_flops_correction(get_config("granite_8b"),
+                                       SHAPES_BY_NAME["decode_32k"]) == 0
+
+
+def test_sanitize_spec_drops_nondividing_axes():
+    import jax
+    from repro.parallel import sanitize_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    s = sanitize_spec(P("model", None), (4, 7), FakeMesh)
+    assert s == P(None, None)
+    s2 = sanitize_spec(P("data", "model"), (32, 64), FakeMesh)
+    assert s2 == P("data", "model")

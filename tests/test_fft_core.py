@@ -1,0 +1,96 @@
+"""Core FFT algorithm vs numpy oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import algo
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_c(shape):
+    return (RNG.standard_normal(shape).astype(np.float32)
+            + 1j * RNG.standard_normal(shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 128, 256, 512, 1024, 4096])
+@pytest.mark.parametrize("karatsuba", [False, True])
+def test_fft_matches_numpy(n, karatsuba):
+    x = _rand_c((3, n))
+    ours = algo.to_complex(algo.fft(algo.to_pair(x), karatsuba=karatsuba))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(np.asarray(ours), ref,
+                               rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [96, 384, 768, 1536])
+def test_fft_non_pow2(n):
+    """Factorable non-powers-of-two (the planner handles any smooth n)."""
+    x = _rand_c((2, n))
+    ours = algo.to_complex(algo.fft(algo.to_pair(x)))
+    ref = np.fft.fft(x)
+    np.testing.assert_allclose(np.asarray(ours), ref,
+                               rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+
+
+@pytest.mark.parametrize("n", [64, 256, 2048])
+def test_ifft_roundtrip(n):
+    x = _rand_c((2, n))
+    back = algo.to_complex(algo.ifft(algo.fft(algo.to_pair(x))))
+    np.testing.assert_allclose(np.asarray(back), x, atol=2e-5 * n)
+
+
+@pytest.mark.parametrize("n", [256, 1024, 16384])
+def test_permuted_roundtrip(n):
+    f2 = algo.default_factorization(n)
+    if len(f2) != 2:
+        pytest.skip("permuted mode is two-factor only")
+    x = _rand_c((2, n))
+    p = algo.fft(algo.to_pair(x), factors=f2, permuted=True)
+    back = algo.to_complex(algo.ifft_from_permuted(p, factors=f2))
+    np.testing.assert_allclose(np.asarray(back), x, atol=2e-5 * n)
+
+
+def test_permuted_is_permutation():
+    n = 256
+    f2 = algo.default_factorization(n)
+    x = _rand_c((1, n))
+    ordered = algo.to_complex(algo.fft(algo.to_pair(x), factors=f2))
+    perm = algo.to_complex(algo.fft(algo.to_pair(x), factors=f2, permuted=True))
+    o = np.sort_complex(np.round(np.asarray(ordered).ravel(), 3))
+    p = np.sort_complex(np.round(np.asarray(perm).ravel(), 3))
+    np.testing.assert_allclose(o, p, atol=1e-2)
+
+
+@pytest.mark.parametrize("n", [16, 128, 512, 4096])
+def test_rfft_irfft(n):
+    x = RNG.standard_normal((4, n)).astype(np.float32)
+    ours = algo.to_complex(algo.rfft(x))
+    np.testing.assert_allclose(np.asarray(ours), np.fft.rfft(x),
+                               rtol=2e-4, atol=2e-4 * n)
+    back = algo.irfft(algo.to_pair(np.fft.rfft(x).astype(np.complex64)))
+    np.testing.assert_allclose(np.asarray(back), x, atol=2e-5 * n)
+
+
+@pytest.mark.parametrize("shape", [(32, 64), (128, 128), (64, 256)])
+def test_rfft2(shape):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    ours = algo.to_complex(algo.rfft2(x))
+    ref = np.fft.rfft2(x)
+    np.testing.assert_allclose(np.asarray(ours), ref,
+                               rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+
+
+def test_fftn_3d():
+    x = _rand_c((8, 16, 32))
+    ours = algo.to_complex(algo.fftn(algo.to_pair(x), ndim=3))
+    ref = np.fft.fftn(x)
+    np.testing.assert_allclose(np.asarray(ours), ref,
+                               rtol=3e-4, atol=3e-4 * np.abs(ref).max())
+
+
+def test_factorization_properties():
+    for n in [128, 256, 4096, 16384, 2 ** 19, 96]:
+        fs = algo.default_factorization(n)
+        assert np.prod(fs) == n
+        assert all(f <= 128 for f in fs)

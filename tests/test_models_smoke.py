@@ -1,0 +1,114 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family,
+one forward + one train step on CPU; output shapes + finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import frontend, lm
+from repro.models.config import SHAPES_BY_NAME
+from repro.models.lm import padded_vocab
+
+B, S = 2, 16
+
+
+def _batch(cfg, key=0):
+    kt, ke = jax.random.split(jax.random.key(key))
+    if cfg.frontend:
+        batch = {"embeds": frontend.synth_embeddings(cfg, B, S, ke),
+                 "labels": jax.random.randint(kt, (B, S), 0, cfg.vocab_size)}
+    else:
+        toks = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+    if cfg.rope == "mrope":
+        batch["positions"] = frontend.mrope_positions(B, S, grid_hw=2)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(1))
+    batch = _batch(cfg)
+
+    logits, aux = jax.jit(lambda p, b: lm.forward(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def loss(p):
+        return lm.loss_fn(p, cfg, batch)[0]
+
+    l0, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(l0))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+    # one SGD step reduces nothing necessarily, but must stay finite
+    params2 = jax.tree_util.tree_map(
+        lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    l1 = float(jax.jit(loss)(params2))
+    assert np.isfinite(l1)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(2))
+    cache = lm.init_cache(cfg, B, max_len=S)
+    if cfg.frontend:
+        batch = {"embeds": frontend.synth_embeddings(cfg, B, 1,
+                                                     jax.random.key(3))}
+    else:
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits, cache2 = jax.jit(
+        lambda p, c, b: lm.decode_step(p, cfg, c, b))(params, cache, batch)
+    assert logits.shape == (B, 1, padded_vocab(cfg))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["len"][0]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact pool hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "granite_8b": (36, 4096, 32, 8, 14336, 49152),
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "granite_3_2b": (40, 2048, 32, 8, 8192, 49155),
+        "phi35_moe_42b": (32, 4096, 32, 8, 6400, 32064),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    assert cfg.total_layers() == cfg.num_layers
+    if arch == "phi35_moe_42b":
+        assert (cfg.num_experts, cfg.top_k) == (16, 2)
+    if arch == "dbrx_132b":
+        assert (cfg.num_experts, cfg.top_k) == (16, 4)
+    if arch == "zamba2_7b":
+        assert cfg.ssm_state == 64
+    if arch == "qwen2_vl_7b":
+        assert cfg.rope == "mrope"
+
+
+def test_param_counts_are_plausible():
+    """Sanity-check total parameter counts against the pool's model names."""
+    from repro.models.params import param_count
+    expect = {"granite_8b": (7e9, 10e9), "olmo_1b": (0.9e9, 1.6e9),
+              "command_r_plus_104b": (90e9, 120e9),
+              "granite_3_2b": (2e9, 3.3e9),
+              "phi35_moe_42b": (38e9, 46e9), "dbrx_132b": (120e9, 140e9),
+              "xlstm_1_3b": (1.0e9, 1.9e9), "zamba2_7b": (5e9, 9e9),
+              "qwen2_vl_7b": (6.5e9, 9e9), "musicgen_large": (1.5e9, 2.8e9)}
+    for arch, (lo, hi) in expect.items():
+        n = param_count(lm.model_meta(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]"

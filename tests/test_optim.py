@@ -1,0 +1,79 @@
+"""Optimizer + compression unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, dequantize_int8, quantize_int8)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200, clip_norm=100.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(cfg, grads, params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+           for s in [0, 5, 10, 60, 110, 200]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert 0.1 < lrs[3] < 1.0                # mid-decay
+    assert abs(lrs[4] - 0.1) < 1e-2          # floor
+    assert abs(lrs[5] - 0.1) < 1e-2          # clamped
+
+
+def test_grad_clipping_applies():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    _, state, m = adamw_update(cfg, {"w": jnp.full(4, 100.0)}, params, state)
+    assert float(m["grad_norm"]) > 100
+    # with lr=0 params don't move but moments got the CLIPPED grad
+    mu = float(jnp.max(jnp.abs(state["mu"]["w"])))
+    assert mu <= (1 - cfg.b1) * (1.0 / 2 + 1e-3)   # clipped to norm 1
+
+
+@pytest.mark.parametrize("shape", [(7,), (1000,), (33, 59)])
+def test_quantize_roundtrip_error(shape):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape) * 5, jnp.float32)
+    q, s, pad = quantize_int8(x)
+    back = dequantize_int8(q, s, pad, x.shape)
+    # per-block symmetric int8: error bounded by scale/2 per element
+    max_per_block = np.abs(np.asarray(x)).max()
+    assert float(jnp.max(jnp.abs(back - x))) <= max_per_block / 127 + 1e-6
+
+
+def test_quantize_preserves_zeros():
+    x = jnp.zeros((512,), jnp.float32)
+    q, s, pad = quantize_int8(x)
+    back = dequantize_int8(q, s, pad, x.shape)
+    np.testing.assert_array_equal(np.asarray(back), 0.0)
+
+
+def test_opt_meta_mirrors_params():
+    from repro.models import lm
+    from repro.optim import opt_meta
+    from repro.configs import get_smoke_config
+    from repro.models.params import abstract_tree
+    meta = lm.model_meta(get_smoke_config("granite_8b"))
+    om = opt_meta(meta)
+    pa = abstract_tree(meta)
+    ma = abstract_tree(om["mu"])
+    assert jax.tree_util.tree_structure(pa) == jax.tree_util.tree_structure(ma)
+    for p, m in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(ma)):
+        assert p.shape == m.shape

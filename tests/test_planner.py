@@ -1,0 +1,74 @@
+"""Planner behaviour: estimate vs measured, wisdom, cost model."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import algo, plan
+
+
+def test_estimate_plan_valid():
+    p = plan.Planner(mode="estimate", backends=("jnp",))
+    pl = p.plan(4096, "c2c", batch=8)
+    assert np.prod(pl.factors) == 4096
+    assert all(f <= 128 for f in pl.factors)
+
+
+def test_estimate_prefers_mxu_sized_factors():
+    """The v5e cost model penalizes tiny factors (MXU underutilization)."""
+    p = plan.Planner(hardware=plan.TPU_V5E, mode="estimate", backends=("jnp",))
+    pl = p.plan(16384, "c2c", batch=64)
+    assert min(pl.factors) >= 32, pl.factors
+
+
+def test_measured_planning_runs_and_caches(tmp_path):
+    w = str(tmp_path / "wisdom.json")
+    p = plan.Planner(mode="measured", backends=("jnp", "xla_native"),
+                     hardware=plan.CPU_LOCAL, wisdom_path=w)
+    pl = p.plan(512, "c2c", batch=16)
+    assert pl.measured_cost > 0
+    t_first = p.last_plan_seconds
+    assert t_first > 0
+    pl2 = p.plan(512, "c2c", batch=16)       # wisdom hit
+    assert p.last_plan_seconds == 0.0
+    assert pl2.factors == pl.factors
+    # wisdom persists across planner instances (FFTW wisdom file semantics)
+    p3 = plan.Planner(mode="measured", backends=("jnp", "xla_native"),
+                      hardware=plan.CPU_LOCAL, wisdom_path=w)
+    p3.plan(512, "c2c", batch=16)
+    assert p3.last_plan_seconds == 0.0
+
+
+def test_execute_matches_backend_choices():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 1024)).astype(np.float32)
+    ref = np.fft.fft(x)
+    for backend in ("jnp", "jnp_karatsuba", "xla_native", "pallas"):
+        p = plan.Planner(mode="estimate", backends=(backend,))
+        pl = p.plan(1024, "c2c")
+        out = plan.execute(pl, algo.to_pair(x.astype(np.complex64)))
+        z = np.asarray(out[0]) + 1j * np.asarray(out[1])
+        if pl.permuted:
+            continue
+        np.testing.assert_allclose(z, ref, rtol=2e-4,
+                                   atol=2e-4 * np.abs(ref).max())
+
+
+def test_plan_flops_karatsuba_saves_quarter():
+    p4 = plan.Plan(4096, "c2c", (64, 64), "jnp")
+    p3 = plan.Plan(4096, "c2c", (64, 64), "jnp_karatsuba")
+    assert abs(p3.flops(1) / p4.flops(1) - 0.75) < 1e-6
+
+
+def test_inverse_execute():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((2, 256)).astype(np.float32) \
+        + 1j * rng.standard_normal((2, 256)).astype(np.float32)
+    for backend in ("jnp", "xla_native"):
+        p = plan.Planner(mode="estimate", backends=(backend,))
+        pl = p.plan(256, "c2c")
+        back = plan.execute_inverse(pl, plan.execute(pl, algo.to_pair(x)))
+        z = np.asarray(back[0]) + 1j * np.asarray(back[1])
+        np.testing.assert_allclose(z, x, atol=1e-3)

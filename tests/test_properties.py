@@ -1,0 +1,94 @@
+"""Hypothesis property tests on the FFT system's mathematical invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algo
+
+SIZES = st.sampled_from([8, 16, 32, 64, 128, 256, 512])
+BATCH = st.integers(min_value=1, max_value=4)
+
+
+def _signal(n, b, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((b, n)).astype(np.float32)
+            + 1j * rng.standard_normal((b, n)).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, b=BATCH, seed=st.integers(0, 2 ** 20),
+       alpha=st.floats(-3, 3), beta=st.floats(-3, 3))
+def test_linearity(n, b, seed, alpha, beta):
+    x = _signal(n, b, seed)
+    y = _signal(n, b, seed + 1)
+    lhs = algo.to_complex(algo.fft(algo.to_pair(alpha * x + beta * y)))
+    rhs = (alpha * algo.to_complex(algo.fft(algo.to_pair(x)))
+           + beta * algo.to_complex(algo.fft(algo.to_pair(y))))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-3 * n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, b=BATCH, seed=st.integers(0, 2 ** 20))
+def test_parseval(n, b, seed):
+    x = _signal(n, b, seed)
+    fx = np.asarray(algo.to_complex(algo.fft(algo.to_pair(x))))
+    np.testing.assert_allclose(np.sum(np.abs(fx) ** 2, -1),
+                               n * np.sum(np.abs(x) ** 2, -1),
+                               rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, b=BATCH, seed=st.integers(0, 2 ** 20))
+def test_inverse(n, b, seed):
+    x = _signal(n, b, seed)
+    back = np.asarray(algo.to_complex(algo.ifft(algo.fft(algo.to_pair(x)))))
+    np.testing.assert_allclose(back, x, atol=1e-4 * n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2 ** 20), shift=st.integers(0, 63))
+def test_shift_theorem(n, seed, shift):
+    """FFT(roll(x, s))[k] == FFT(x)[k] * exp(-2 pi i k s / n)."""
+    shift = shift % n
+    x = _signal(n, 1, seed)
+    fx = np.asarray(algo.to_complex(algo.fft(algo.to_pair(x))))
+    fs = np.asarray(algo.to_complex(algo.fft(algo.to_pair(
+        np.roll(x, shift, axis=-1)))))
+    k = np.arange(n)
+    phase = np.exp(-2j * np.pi * k * shift / n)
+    np.testing.assert_allclose(fs, fx * phase, atol=2e-3 * n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2 ** 20))
+def test_convolution_theorem(n, seed):
+    """ifft(fft(x) * fft(h)) == circular_conv(x, h), incl permuted plans."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, n)).astype(np.float32)
+    h = rng.standard_normal((1, n)).astype(np.float32)
+    ref = np.real(np.fft.ifft(np.fft.fft(x) * np.fft.fft(h)))
+    factors = algo.default_factorization(n)
+    xp = algo.to_pair(x.astype(np.complex64))
+    hp = algo.to_pair(h.astype(np.complex64))
+    if len(factors) == 2:
+        fx = algo.fft(xp, factors=factors, permuted=True)
+        fh = algo.fft(hp, factors=factors, permuted=True)
+        out = algo.ifft_from_permuted(algo.cmul(fx, fh), factors=factors)
+    else:
+        fx = algo.fft(xp)
+        fh = algo.fft(hp)
+        out = algo.ifft(algo.cmul(fx, fh))
+    np.testing.assert_allclose(np.asarray(out[0]), ref, atol=2e-3 * n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 64, 256]), seed=st.integers(0, 2 ** 20))
+def test_rfft_conjugate_symmetry_consistency(n, seed):
+    """rfft equals fft of the real signal on the half spectrum."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, n)).astype(np.float32)
+    half = np.asarray(algo.to_complex(algo.rfft(x)))
+    full = np.asarray(algo.to_complex(algo.fft(
+        algo.to_pair(x.astype(np.complex64)))))
+    np.testing.assert_allclose(half, full[..., :n // 2 + 1], atol=1e-3 * n)
