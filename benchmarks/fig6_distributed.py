@@ -7,6 +7,10 @@ parsed from the compiled HLO (the roofline-relevant number: AGAS moves ~P x
 the bytes; pipelined moves the same bytes as collective but in overlap-ready
 chunks).
 
+Covers both decompositions x every comm backend: the 1D slab layout (8-way
+mesh, 2D r2c) and the 2D pencil layout (4x2 mesh, 3D c2c with row/column
+communicators), plus mixed per-axis backend selection on the pencil path.
+
 The multi-device part runs in a subprocess (device-count override is
 process-local).
 """
@@ -74,6 +78,47 @@ def _worker() -> None:
         emit(f"fig6/keep_transposed/n{n}", t_kt,
              f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
              f"n_collectives={sum(counts.values())}")
+
+    # pencil decomposition (P3DFFT-style) x comm backend on a 4x2 mesh:
+    # same exchange layer, but collectives stay inside row/column
+    # communicators, so per-exchange wire bytes scale with the communicator
+    # size rather than the full device count.
+    mesh2 = jax.make_mesh((4, 2), ("mx", "my"))
+    nx, ny, nz = 32, 64, 64
+    pair = tuple(
+        jax.device_put(rng.standard_normal((nx, ny, nz)).astype(np.float32),
+                       NamedSharding(mesh2, P("mx", "my", None)))
+        for _ in range(2))
+    base = None
+    pencil_comms = [("collective",) * 2, ("pipelined",) * 2, ("agas",) * 2,
+                    ("collective", "pipelined")]
+    for comms in pencil_comms:
+        tag = "+".join(sorted(set(comms))) if len(set(comms)) > 1 \
+            else comms[0]
+        fn = jax.jit(lambda a, b, _c=comms: dfft.fft3_pencil(
+            (a, b), mesh2, ("mx", "my"), planner, comm=_c))
+        t = time_fn(fn, *pair)
+        _, counts, wire = parse_collectives(
+            fn.lower(*pair).compile().as_text(), with_wire=True)
+        wb = sum(wire.values())
+        if base is None:
+            base = wb
+        emit(f"fig6/pencil_{tag}/x{nx}y{ny}z{nz}", t,
+             f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
+             f"n_collectives={sum(counts.values())}")
+    # r2c pencil (padded half spectrum) with the planned backend choice
+    xr = jax.device_put(
+        rng.standard_normal((nx, ny, nz)).astype(np.float32),
+        NamedSharding(mesh2, P("mx", "my", None)))
+    fn = jax.jit(lambda a: dfft.rfft3_pencil(a, mesh2, ("mx", "my"),
+                                             planner, comm="auto"))
+    t = time_fn(fn, xr)
+    _, counts, wire = parse_collectives(
+        fn.lower(xr).compile().as_text(), with_wire=True)
+    wb = sum(wire.values())
+    emit(f"fig6/pencil_r2c_auto/x{nx}y{ny}z{nz}", t,
+         f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
+         f"n_collectives={sum(counts.values())}")
 
 
 if __name__ == "__main__":

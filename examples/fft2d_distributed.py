@@ -13,8 +13,8 @@ import jax                                    # noqa: E402
 import numpy as np                            # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core import Planner, fft2_slab, fft3_pencil, ifft2_slab  # noqa: E402
-from repro.core.algo import to_pair           # noqa: E402
+from repro.core import (Planner, fft2_slab, fft3_pencil, ifft2_slab,  # noqa: E402
+                        ifft3_pencil, irfft3_pencil, rfft3_pencil)
 
 
 def main() -> None:
@@ -43,7 +43,7 @@ def main() -> None:
     back = ifft2_slab(c, mesh, "fft", m, planner)
     print("ifft2 roundtrip err:", float(np.max(np.abs(np.asarray(back) - x))))
 
-    # 3D pencil decomposition (P3DFFT-style) on a 4x2 mesh
+    # 3D pencil decomposition (P3DFFT-style) on a 4x2 mesh, per comm backend
     mesh2 = jax.make_mesh((4, 2), ("mx", "my"))
     xc = (rng.standard_normal((32, 64, 128)).astype(np.float32)
           + 1j * rng.standard_normal((32, 64, 128)).astype(np.float32))
@@ -51,11 +51,33 @@ def main() -> None:
                            NamedSharding(mesh2, P("mx", "my", None))),
             jax.device_put(np.imag(xc).astype(np.float32),
                            NamedSharding(mesh2, P("mx", "my", None))))
-    rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner)
     ref3 = np.fft.fftn(xc)
-    err3 = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref3)) \
-        / np.max(np.abs(ref3))
-    print(f"fft3_pencil (4x2 mesh) rel_err={err3:.2e}")
+    for comm in ("collective", "pipelined", "agas"):
+        rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner, comm=comm)
+        err3 = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref3)) \
+            / np.max(np.abs(ref3))
+        print(f"fft3_pencil comm={comm:10s} (4x2 mesh) rel_err={err3:.2e}")
+
+    # mixed per-axis selection: pipeline the row-communicator exchange only
+    rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner,
+                         comm=("collective", "pipelined"))
+    br, bi = ifft3_pencil((rr, ri), mesh2, ("mx", "my"), planner,
+                          comm=("collective", "pipelined"))
+    back3 = np.asarray(br) + 1j * np.asarray(bi)
+    print("ifft3 roundtrip err:", float(np.max(np.abs(back3 - xc))))
+
+    # 3D r2c/c2r pencil roundtrip (padded half spectrum, as the 2D path)
+    xr3 = rng.standard_normal((32, 64, 128)).astype(np.float32)
+    xr3s = jax.device_put(xr3, NamedSharding(mesh2, P("mx", "my", None)))
+    re3, im3 = rfft3_pencil(xr3s, mesh2, ("mx", "my"), planner, comm="auto")
+    z3 = (np.asarray(re3)[..., :128 // 2 + 1]
+          + 1j * np.asarray(im3)[..., :128 // 2 + 1])
+    err_r = np.max(np.abs(z3 - np.fft.rfftn(xr3))) \
+        / np.max(np.abs(np.fft.rfftn(xr3)))
+    back_r = irfft3_pencil((re3, im3), mesh2, ("mx", "my"), 128, planner,
+                           comm="auto")
+    print(f"rfft3_pencil rel_err={err_r:.2e}  irfft3 roundtrip err:",
+          float(np.max(np.abs(np.asarray(back_r) - xr3))))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 minus the slow multi-device subprocess suites — seconds instead of
+# minutes, for quick local iteration.  Full tier-1 remains:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q -m "not slow" "$@"

@@ -1,0 +1,295 @@
+"""Communication backends for distributed-FFT redistributions (paper §5.3).
+
+The paper's headline distributed result is that the *exchange* dominates
+distributed FFT time, and that a faster exchange layer (the LCI parcelport,
+up to 5x) is worth swapping in wholesale.  This module makes the exchange a
+first-class, swappable subsystem: one :class:`CommBackend` implementation
+per strategy, shared by the slab (:func:`repro.core.dfft.fft2_slab`), pencil
+(:func:`repro.core.dfft.fft3_pencil`) and sequence-sharded convolution
+(:mod:`repro.core.fftconv`) paths instead of per-path inlined collectives.
+
+Backends (paper §5.3, Fig. 6):
+
+* ``collective`` — one monolithic ``jax.lax.all_to_all`` per redistribution
+  (HPX collectives over the MPI parcelport; XLA's stock schedule).
+* ``pipelined`` — the redistribution is split into chunks; chunk c's
+  all_to_all is issued while chunk c+1's FFT computes, a software pipeline
+  that hides link latency behind MXU work.  Same bytes on the wire, less
+  *exposed* time — the TPU-native analogue of the LCI parcelport speedup.
+  Spell ``"pipelined:8"`` to override the chunk count inline.
+* ``agas`` — all-gather-then-slice: every locality materializes the full
+  array and resolves its block through a global index, emulating the
+  redundant data movement of implicit AGAS addressing.  Implemented to
+  *measure* the overhead the paper plots (Fig. 1, dark blue), not to be
+  used.
+
+An exchange is described positionally, matching ``jax.lax.all_to_all``
+tiled semantics: "split axis ``split`` into the ``p`` participants, send
+block d to participant d, concatenate received blocks along ``concat``".
+One implementation therefore serves the 2D slab layout, the 3D pencil
+row/column communicators, and the 4D convolution layout.
+
+Communication *planning* also lives here: :func:`plan_comm` (1D slab
+decomposition) and :func:`plan_comm_pencil` (2D-mesh pencil decomposition,
+one choice per row/column communicator) pick a backend from the roofline
+model — FFTW-style planning applied to the paper's parcelport choice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import algo
+
+Complex = algo.Complex
+
+COMM_BACKENDS = ("collective", "pipelined", "agas")
+
+
+def padded_half(m: int, p: int) -> int:
+    """Column count after r2c (m//2+1) padded up to a multiple of p."""
+    mh = m // 2 + 1
+    return ((mh + p - 1) // p) * p
+
+
+# ---------------------------------------------------------------------------
+# pair-valued collective primitives (the only place raw collectives appear)
+# ---------------------------------------------------------------------------
+
+
+def a2a_pair(c: Complex, axis_name: str, split: int, concat: int) -> Complex:
+    """Tiled all_to_all of an (re, im) pair."""
+    f = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+                          split_axis=split, concat_axis=concat, tiled=True)
+    return f(c[0]), f(c[1])
+
+
+def all_gather_pair(c: Complex, axis_name: str, axis: int = 0,
+                    tiled: bool = False) -> Complex:
+    """all_gather of a pair of same-layout arrays (spectrum halves, or any
+    payload+metadata pair such as int8 gradients + scales)."""
+    f = functools.partial(jax.lax.all_gather, axis_name=axis_name,
+                          axis=axis, tiled=tiled)
+    return f(c[0]), f(c[1])
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class CommBackend:
+    """One redistribution strategy for pair-valued sharded exchanges."""
+
+    name: str = "abstract"
+
+    def exchange(self, c: Complex, axis_name: str, *, split: int,
+                 concat: int, p: int) -> Complex:
+        """Redistribute: split ``split`` over the ``p`` participants of
+        ``axis_name``, concatenate received blocks along ``concat``."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}()"
+
+
+class CollectiveBackend(CommBackend):
+    """Monolithic all_to_all (MPI-parcelport analogue)."""
+
+    name = "collective"
+
+    def exchange(self, c, axis_name, *, split, concat, p):
+        return a2a_pair(c, axis_name, split, concat)
+
+
+class PipelinedBackend(CommBackend):
+    """Chunked all_to_all software pipeline (LCI-parcelport analogue).
+
+    Each participant's DESTINATION block of width W = size(split)/p is cut
+    into ``chunks`` sub-blocks; sub-block c of every destination is
+    exchanged by its own all_to_all, so the concatenation of received chunks
+    along ``split`` reproduces the monolithic layout exactly.  XLA emits
+    independent all-to-all-start/done pairs, so on hardware chunk c's
+    transfer overlaps chunk c+1's residual compute; bytes on the wire are
+    identical to the monolithic collective, but the exposed communication
+    time shrinks.
+    """
+
+    name = "pipelined"
+
+    def __init__(self, chunks: int = 4):
+        self.chunks = chunks
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"PipelinedBackend(chunks={self.chunks})"
+
+    def exchange(self, c, axis_name, *, split, concat, p):
+        shape = c[0].shape
+        w = shape[split] // p
+        chunks = max(1, min(self.chunks, w))
+        while w % chunks:
+            chunks -= 1
+        if chunks == 1:
+            return a2a_pair(c, axis_name, split, concat)
+        wc = w // chunks
+        grouped = shape[:split] + (p, w) + shape[split + 1:]
+        flat = shape[:split] + (p * wc,) + shape[split + 1:]
+        g = (c[0].reshape(grouped), c[1].reshape(grouped))
+        outs = []
+        for k in range(chunks):
+            piece = tuple(
+                jax.lax.dynamic_slice_in_dim(a, k * wc, wc, split + 1)
+                .reshape(flat) for a in g)
+            outs.append(a2a_pair(piece, axis_name, split, concat))
+        return (jnp.concatenate([o[0] for o in outs], axis=split),
+                jnp.concatenate([o[1] for o in outs], axis=split))
+
+
+class AgasBackend(CommBackend):
+    """AGAS emulation: implicit addressing = replicate-then-slice.
+
+    Every locality gathers the FULL array (p x the necessary bytes) along
+    the concat direction and then resolves its block through a global index
+    — the redundant data movement the paper measures for the AGAS variant.
+    """
+
+    name = "agas"
+
+    def exchange(self, c, axis_name, *, split, concat, p):
+        re, im = all_gather_pair(c, axis_name, axis=concat, tiled=True)
+        i = jax.lax.axis_index(axis_name)
+        w = re.shape[split] // p
+        return (jax.lax.dynamic_slice_in_dim(re, i * w, w, split),
+                jax.lax.dynamic_slice_in_dim(im, i * w, w, split))
+
+
+# ---------------------------------------------------------------------------
+# resolution: strings (and per-axis collections of strings) -> backends
+# ---------------------------------------------------------------------------
+
+CommSpec = Union[str, CommBackend]
+
+
+def get_backend(spec: CommSpec, chunks: int = 4) -> CommBackend:
+    """Resolve a backend spec: a :class:`CommBackend` instance, or one of
+    ``"collective"`` / ``"pipelined"`` (optionally ``"pipelined:<chunks>"``)
+    / ``"agas"``."""
+    if isinstance(spec, CommBackend):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"comm spec must be str or CommBackend, got {spec!r}")
+    name, _, arg = spec.partition(":")
+    if name == "collective":
+        return CollectiveBackend()
+    if name == "pipelined":
+        return PipelinedBackend(int(arg) if arg else chunks)
+    if name == "agas":
+        return AgasBackend()
+    raise ValueError(f"comm backend {spec!r}; options {COMM_BACKENDS}")
+
+
+def resolve_axis_backends(comm, axes: Sequence[str],
+                          chunks: int = 4) -> Tuple[CommBackend, ...]:
+    """Per-mesh-axis backend resolution for multi-axis (pencil) paths.
+
+    ``comm`` may be a single spec (applied to every axis), a sequence with
+    one spec per axis (ordered as ``axes``), or a dict keyed by mesh-axis
+    name (missing axes default to ``"collective"``).
+    """
+    if isinstance(comm, dict):
+        unknown = set(comm) - set(axes)
+        if unknown:
+            raise ValueError(
+                f"per-axis comm has unknown mesh axes {sorted(unknown)}; "
+                f"valid axes: {tuple(axes)}")
+        return tuple(get_backend(comm.get(a, "collective"), chunks)
+                     for a in axes)
+    if isinstance(comm, (list, tuple)):
+        if len(comm) != len(axes):
+            raise ValueError(
+                f"per-axis comm needs {len(axes)} entries for {axes}, "
+                f"got {len(comm)}")
+        return tuple(get_backend(s, chunks) for s in comm)
+    return tuple(get_backend(comm, chunks) for _ in axes)
+
+
+# ---------------------------------------------------------------------------
+# communication-aware planning (FFTW-style planning applied to the paper's
+# parcelport choice: pick the comm backend from the roofline model)
+# ---------------------------------------------------------------------------
+
+
+def plan_comm(n: int, m: int, p: int, hw=None,
+              overlap_capable: bool = True) -> str:
+    """Choose the communication backend for an (n x m) slab FFT on p chips.
+
+    Cost model (per device, per exchange):
+      collective: wire = 2 * (p-1)/p * slab_bytes           (two all_to_alls)
+      pipelined:  same wire, exposed time ~ 1/chunks, but adds one slab
+                  read+write of HBM traffic for the chunk copies
+      agas:       wire = 2 * (p-1) * slab_bytes              (never chosen)
+    The monolithic collective wins when the exchange is small relative to
+    compute (it fuses best); pipelining wins when exposed-comm would exceed
+    ~20% of the local FFT compute time and overlap hardware exists.
+    """
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    mh_pad = padded_half(m, p)
+    slab_bytes = (n / p) * mh_pad * 8.0
+    wire = 2.0 * (p - 1) / p * slab_bytes
+    t_comm = wire / hw.link_bw
+    # local compute: four-step matmul flops for rows + cols
+    flops = 8.0 * (n / p) * mh_pad * (
+        sum(algo.default_factorization(m // 2))
+        + sum(algo.default_factorization(n)))
+    t_comp = flops / hw.flops
+    if overlap_capable and t_comm > 0.2 * t_comp:
+        return "pipelined"
+    return "collective"
+
+
+def plan_comm_pencil(shape: Tuple[int, int, int],
+                     mesh_shape: Tuple[int, int], hw=None,
+                     overlap_capable: bool = True,
+                     kind: str = "c2c") -> Tuple[str, str]:
+    """Choose per-axis comm backends for a pencil FFT on a (p0, p1) mesh.
+
+    Unlike the 1D slab model, pencil exchanges run inside row/column
+    communicators: the Z<->Y exchange stays within the p1-sized row
+    communicator (mesh axis 1) and overlaps the Y-stage FFTs; the Y<->X
+    exchange stays within the p0-sized column communicator (mesh axis 0)
+    and overlaps the X-stage FFTs.  Each communicator is planned
+    independently against the stage it can hide behind:
+
+      wire_axis = (p_axis - 1)/p_axis * pencil_bytes
+      t_comp    = four-step matmul flops of that stage / hw.flops
+
+    Returns ``(backend_for_mesh_axis_0, backend_for_mesh_axis_1)``, the
+    order :func:`repro.core.dfft.fft3_pencil` consumes.
+    """
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    nx, ny, nz = shape
+    p0, p1 = mesh_shape
+    nz_eff = padded_half(nz, p1) if kind in ("r2c", "c2r") else nz
+    # the local pencil: an (re, im) f32 pair, constant across both exchanges
+    pencil_bytes = (nx / p0) * (ny / p1) * nz_eff * 8.0
+    elems = pencil_bytes / 8.0
+
+    def choose(p: int, n_axis: int) -> str:
+        if p <= 1:
+            return "collective"
+        wire = (p - 1) / p * pencil_bytes
+        t_comm = wire / hw.link_bw
+        flops = 8.0 * elems * sum(algo.default_factorization(n_axis))
+        t_comp = flops / hw.flops
+        if overlap_capable and t_comm > 0.2 * t_comp:
+            return "pipelined"
+        return "collective"
+
+    # mesh axis 0's exchange feeds the X-stage; mesh axis 1's the Y-stage
+    return choose(p0, nx), choose(p1, ny)

@@ -1,0 +1,133 @@
+"""Version-compatibility shims for the installed JAX.
+
+The codebase targets the modern ``jax.shard_map`` entry point (promoted out
+of ``jax.experimental`` in JAX 0.5) and its keyword spelling.  On JAX 0.4.x
+the function only exists at ``jax.experimental.shard_map.shard_map`` and
+takes the older keywords: ``check_rep`` instead of ``check_vma``, and
+``auto`` (the set of axes left to GSPMD) instead of ``axis_names`` (the set
+of axes made manual).  Every ``shard_map`` call site in the repo goes
+through :func:`shard_map` below so the translation lives in exactly one
+place.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Set
+
+import jax
+
+__all__ = ["shard_map", "pvary", "ring_shift", "scan_carry",
+           "partial_manual_region", "legacy_partial_manual"]
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def partial_manual_region():
+    """Mark code traced within as living inside a PARTIAL-manual shard_map
+    region (manual over some mesh axes, auto/GSPMD over the rest).
+
+    JAX 0.4.x's SPMD partitioner cannot lower collective-permute,
+    all_to_all, ``axis_index``'s partition-id, or while-loops whose bodies
+    gather region inputs when auto axes remain in scope — only psum-family
+    collectives survive.  :func:`ring_shift` and :func:`scan_carry` switch
+    to partitioner-safe (but costlier) fallbacks only inside this context
+    AND only on old JAX; everywhere else they emit the native ops.  Wrap
+    the *invocation* of the shard_map-wrapped callable (tracing happens
+    there), as :func:`repro.parallel.pipelined_lm.pipelined_loss_fn` does.
+    """
+    prev = getattr(_TLS, "partial_manual", False)
+    _TLS.partial_manual = True
+    try:
+        yield
+    finally:
+        _TLS.partial_manual = prev
+
+
+def legacy_partial_manual() -> bool:
+    """True when tracing inside :func:`partial_manual_region` on a JAX
+    whose partitioner needs the fallbacks (0.4.x)."""
+    return (not hasattr(jax, "shard_map")
+            and getattr(_TLS, "partial_manual", False))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names: Optional[Set] = None):
+    """``jax.shard_map`` with a fallback for JAX 0.4.x.
+
+    Accepts the modern keywords; on older JAX they are translated to the
+    experimental API (``check_vma`` -> ``check_rep``; ``axis_names`` -> the
+    complement ``auto`` set of the mesh's axis names).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` (mark a value as varying over manual mesh axes for
+    the VMA type system, JAX >= 0.5).  JAX 0.4.x has no VMA tracking, so the
+    operation degenerates to the identity there."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def ring_shift(out, axis_name, me, s):
+    """Send ``out`` one step along the ring ((i -> i+1) mod s) over
+    ``axis_name``; receiver i gets stage i-1's value.
+
+    Normally a plain ``ppermute``.  Inside a 0.4.x partial-manual region
+    (see :func:`partial_manual_region`) collective-permute cannot lower,
+    so the fallback routes the shift through a psum of a one-hot-slotted
+    buffer: sender i writes ``out`` into slot i+1, the psum superposes
+    all slots, receiver i reads slot i.  Same ring semantics, s x the
+    wire bytes; only taken where nothing cheaper lowers.  ``me`` must be
+    the caller's stage index — thread it in as DATA (an iota sharded over
+    the pipeline axis) when auto axes are present, since ``axis_index``
+    itself cannot lower there.
+    """
+    if not legacy_partial_manual():
+        perm = [(i, (i + 1) % s) for i in range(s)]
+        return jax.lax.ppermute(out, axis_name, perm)
+    import jax.numpy as jnp
+    slot = (me + 1) % s
+    contrib = jnp.zeros((s,) + out.shape, out.dtype)
+    contrib = jax.lax.dynamic_update_index_in_dim(contrib, out, slot, 0)
+    g = jax.lax.psum(contrib, axis_name)
+    return jax.lax.dynamic_index_in_dim(g, me, 0, keepdims=False)
+
+
+def scan_carry(body, init, xs):
+    """``jax.lax.scan`` threading only the carry (ys discarded) — returns
+    ``(carry, None)``.
+
+    Inside a 0.4.x partial-manual region the while-loop trips the same
+    partitioner CHECK as the collectives above (the loop body gathers
+    per-iteration slices of region inputs while manual-subgroup
+    collectives live in the surrounding computation), so there — and only
+    there — the loop unrolls.  Use it for loops that may run inside such
+    regions and whose trip count stays small and static (per-stage layer
+    stacks, flash-attention kv blocks); everywhere else it is exactly
+    ``lax.scan``.
+    """
+    if not legacy_partial_manual():
+        carry, _ = jax.lax.scan(body, init, xs)
+        return carry, None
+    import jax.tree_util as jtu
+    n = jtu.tree_leaves(xs)[0].shape[0]
+    carry = init
+    for i in range(n):
+        carry, _ = body(carry, jtu.tree_map(lambda a, _i=i: a[_i], xs))
+    return carry, None

@@ -6,19 +6,14 @@ central design decision ("relying on the implicit communication HPX allows
 with AGAS does not make sense; instead we use the HPX equivalents of the MPI
 collective operations").
 
-Communication backends (paper §5.3, Fig. 6):
-
-* ``collective`` — one monolithic ``jax.lax.all_to_all`` per redistribution
-  (HPX collectives over the MPI parcelport; XLA's stock schedule).
-* ``pipelined`` — the redistribution is split into ``chunks`` column groups;
-  chunk c's all_to_all is issued while chunk c+1's row-FFT computes, a
-  software pipeline that hides ICI latency behind MXU work.  This is the
-  TPU-native analogue of the LCI parcelport's 4-5x communication speedup:
-  same bytes, less *exposed* time.
-* ``agas`` — all-gather-then-slice: every locality materializes the full
-  matrix and takes its slice, emulating the redundant data movement of
-  implicit AGAS addressing.  Implemented to *measure* the overhead the paper
-  plots (Fig. 1, dark blue), not to be used.
+All redistributions go through the swappable exchange layer in
+:mod:`repro.core.comm` (``collective`` / ``pipelined`` / ``agas`` — see that
+module for the cost characteristics and the ``plan_comm`` /
+``plan_comm_pencil`` roofline planners).  Every entry point takes a ``comm``
+spec: a backend name, a :class:`repro.core.comm.CommBackend` instance,
+``"auto"`` (roofline-planned), or — for the pencil path — a per-mesh-axis
+sequence/dict so the row and column communicators can use different
+strategies.
 
 Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
 
@@ -32,11 +27,15 @@ Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
 The transform matches ``numpy.fft.rfft2`` zero-padded to the padded column
 count; ``Mh`` is padded to a multiple of P for collective divisibility and
 cropped by the caller-facing wrappers.
+
+Pencil decomposition (P3DFFT-style, 2D mesh) has full parity with slab:
+forward/inverse c2c (:func:`fft3_pencil` / :func:`ifft3_pencil`) and r2c/c2r
+(:func:`rfft3_pencil` / :func:`irfft3_pencil`) with the same padded-half
+cropping convention as the 2D path.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -45,17 +44,20 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import algo
-from .plan import Plan, Planner, execute
+from .comm import (COMM_BACKENDS, CommBackend, CommSpec, get_backend,
+                   padded_half, plan_comm, plan_comm_pencil,
+                   resolve_axis_backends)
+from .compat import shard_map
+from .plan import Plan, Planner, execute, execute_inverse
 
 Complex = algo.Complex
 
-COMM_BACKENDS = ("collective", "pipelined", "agas")
-
-
-def padded_half(m: int, p: int) -> int:
-    """Column count after r2c (m//2+1) padded up to a multiple of p."""
-    mh = m // 2 + 1
-    return ((mh + p - 1) // p) * p
+__all__ = [
+    "COMM_BACKENDS", "padded_half", "plan_comm", "plan_comm_pencil",
+    "fft2_slab", "ifft2_slab",
+    "fft3_pencil", "ifft3_pencil", "rfft3_pencil", "irfft3_pencil",
+    "distribute", "collect",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -64,19 +66,15 @@ def padded_half(m: int, p: int) -> int:
 
 
 def _local_rows_rfft(x: jax.Array, plan: Plan, mh_pad: int) -> Complex:
-    """r2c FFT along rows + zero-pad columns to the collective-divisible width."""
+    """r2c FFT along the last axis + zero-pad to the collective-divisible
+    width (works for any number of leading batch axes)."""
     re, im = execute(plan, x)
     pad = mh_pad - re.shape[-1]
     if pad:
-        re = jnp.pad(re, ((0, 0), (0, pad)))
-        im = jnp.pad(im, ((0, 0), (0, pad)))
+        widths = ((0, 0),) * (re.ndim - 1) + ((0, pad),)
+        re = jnp.pad(re, widths)
+        im = jnp.pad(im, widths)
     return re, im
-
-
-def _a2a(c: Complex, axis_name: str, split: int, concat: int) -> Complex:
-    f = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
-                          split_axis=split, concat_axis=concat, tiled=True)
-    return f(c[0]), f(c[1])
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +84,7 @@ def _a2a(c: Complex, axis_name: str, split: int, concat: int) -> Complex:
 
 def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
               planner: Optional[Planner] = None,
-              comm: str = "collective", chunks: int = 4,
+              comm: CommSpec = "collective", chunks: int = 4,
               keep_transposed: bool = False,
               permuted_cols: bool = False):
     """Distributed 2D r2c FFT.
@@ -97,6 +95,9 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
     second communication step when the consumer accepts transposed layout —
     e.g. convolution pipelines that come straight back).
 
+    ``comm`` selects the exchange backend (see :mod:`repro.core.comm`);
+    ``"auto"`` plans it from the roofline model of ``planner``'s hardware.
+
     ``permuted_cols`` skips the column FFT's digit transpose (output columns
     arrive in four-step permuted frequency order — valid for pointwise
     spectral consumers; pair with ``ifft2_slab(..., permuted_cols=True)``).
@@ -105,29 +106,25 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
     planner = planner or Planner(backends=("jnp",))
     n, m = x.shape
     p = mesh.shape[axis]
+    if comm == "auto":
+        comm = plan_comm(n, m, p, hw=planner.hw)
+    backend = get_backend(comm, chunks=chunks)
     mh_pad = padded_half(m, p)
     row_plan = planner.plan(m, kind="r2c")
     col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
 
     def local(xl: jax.Array) -> Tuple[jax.Array, jax.Array]:
         y = _local_rows_rfft(xl, row_plan, mh_pad)              # (n/p, mh_pad)
-        if comm == "collective":
-            y = _a2a(y, axis, split=1, concat=0)                # (n, mh_pad/p)
-        elif comm == "pipelined":
-            y = _pipelined_exchange(y, axis, p, chunks)
-        elif comm == "agas":
-            y = _agas_exchange(y, axis, p)
-        else:
-            raise ValueError(f"comm backend {comm!r}; options {COMM_BACKENDS}")
+        y = backend.exchange(y, axis, split=1, concat=0, p=p)   # (n, mh_pad/p)
         # transpose AFTER communication (paper §3.2): write-contiguous rows
         yt = (y[0].T, y[1].T)                                   # (mh_pad/p, n)
         z = execute(col_plan, yt)                               # column FFTs
         if keep_transposed:
             return z
         zt = (z[0].T, z[1].T)                                   # (n, mh_pad/p)
-        return _a2a(zt, axis, split=0, concat=1)                # (n/p, mh_pad)
+        return backend.exchange(zt, axis, split=0, concat=1, p=p)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=P(axis, None),
         out_specs=(P(None, axis) if keep_transposed else P(axis, None)),
@@ -135,89 +132,35 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
 
 
 def ifft2_slab(c: Complex, mesh: jax.sharding.Mesh, axis: str, m: int,
-               planner: Optional[Planner] = None, comm: str = "collective",
+               planner: Optional[Planner] = None,
+               comm: CommSpec = "collective", chunks: int = 4,
                from_transposed: bool = False,
                permuted_cols: bool = False) -> jax.Array:
     """Inverse of :func:`fft2_slab` back to a real (N, M) array."""
     planner = planner or Planner(backends=("jnp",))
     n = c[0].shape[1] if from_transposed else c[0].shape[0]
     p = mesh.shape[axis]
+    if comm == "auto":
+        comm = plan_comm(n, m, p, hw=planner.hw)
+    backend = get_backend(comm, chunks=chunks)
     mh = m // 2 + 1
-    mh_pad = padded_half(m, p)
     col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
     row_plan = planner.plan(m, kind="c2r")
 
     def local(cr: jax.Array, ci: jax.Array) -> jax.Array:
         z = (cr, ci)
         if not from_transposed:                                 # (n/p, mh_pad)
-            z = _a2a(z, axis, split=1, concat=0)                # (n, mh_pad/p)
+            z = backend.exchange(z, axis, split=1, concat=0, p=p)
             z = (z[0].T, z[1].T)                                # (mh_pad/p, n)
-        if permuted_cols:
-            zi = algo.ifft_from_permuted((z[0], z[1]),
-                                         factors=col_plan.factors,
-                                         karatsuba=col_plan.karatsuba)
-        else:
-            zi = algo.ifft((z[0], z[1]), factors=col_plan.factors or None,
-                           karatsuba=col_plan.karatsuba)        # inverse cols
+        zi = execute_inverse(col_plan, z)                       # inverse cols
         zt = (zi[0].T, zi[1].T)                                 # (n, mh_pad/p)
-        y = _a2a(zt, axis, split=0, concat=1)                   # (n/p, mh_pad)
+        y = backend.exchange(zt, axis, split=0, concat=1, p=p)  # (n/p, mh_pad)
         y = (y[0][:, :mh], y[1][:, :mh])                        # crop padding
         return execute(row_plan, y)                             # c2r rows
 
     in_spec = P(None, axis) if from_transposed else P(axis, None)
-    return jax.shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
-                         out_specs=P(axis, None))(c[0], c[1])
-
-
-# ---------------------------------------------------------------------------
-# communication backends
-# ---------------------------------------------------------------------------
-
-
-def _pipelined_exchange(y: Complex, axis: str, p: int, chunks: int) -> Complex:
-    """Chunked all_to_all pipeline (the LCI-parcelport analogue).
-
-    Each device's DESTINATION column block [d*W, (d+1)*W) (W = mh_pad/p) is
-    split into ``chunks`` sub-blocks; sub-block c of every destination is
-    exchanged by its own all_to_all, so the concatenation of the received
-    chunks reproduces the monolithic layout exactly.  XLA emits independent
-    all-to-all-start/done pairs, so on hardware chunk c's transfer overlaps
-    chunk c+1's residual compute; bytes on the wire are identical to the
-    monolithic collective, but the exposed communication time shrinks.
-    """
-    rloc, mh_pad = y[0].shape
-    w_dest = mh_pad // p
-    chunks = max(1, min(chunks, w_dest))
-    while w_dest % chunks:
-        chunks -= 1
-    wc = w_dest // chunks
-
-    y3 = (y[0].reshape(rloc, p, w_dest), y[1].reshape(rloc, p, w_dest))
-    outs = []
-    for c in range(chunks):
-        piece = (jax.lax.dynamic_slice_in_dim(y3[0], c * wc, wc, 2)
-                 .reshape(rloc, p * wc),
-                 jax.lax.dynamic_slice_in_dim(y3[1], c * wc, wc, 2)
-                 .reshape(rloc, p * wc))
-        outs.append(_a2a(piece, axis, split=1, concat=0))       # (n, wc)
-    re = jnp.concatenate([o[0] for o in outs], axis=1)
-    im = jnp.concatenate([o[1] for o in outs], axis=1)
-    return re, im
-
-
-def _agas_exchange(y: Complex, axis: str, p: int) -> Complex:
-    """AGAS emulation: implicit addressing = replicate-then-slice.
-
-    Every locality gathers the FULL matrix (p x the necessary bytes) and then
-    resolves its slice through a global index — the redundant data movement
-    the paper measures for the AGAS variant.
-    """
-    re = jax.lax.all_gather(y[0], axis, axis=0, tiled=True)     # (n, mh_pad)
-    im = jax.lax.all_gather(y[1], axis, axis=0, tiled=True)
-    i = jax.lax.axis_index(axis)
-    w = re.shape[1] // p
-    return (jax.lax.dynamic_slice_in_dim(re, i * w, w, 1),
-            jax.lax.dynamic_slice_in_dim(im, i * w, w, 1))
+    return shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
+                     out_specs=P(axis, None))(c[0], c[1])
 
 
 # ---------------------------------------------------------------------------
@@ -238,75 +181,172 @@ def collect(x: jax.Array) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# communication-aware planning (FFTW-style planning applied to the paper's
-# parcelport choice: pick the comm backend from the roofline model)
+# pencil-decomposed 3D FFTs (P3DFFT-style, 2D mesh)
 # ---------------------------------------------------------------------------
+#
+# Layout convention (forward direction), mesh axes (ax0, ax1) = (p0, p1):
+#
+#   input   (X/p0, Y/p1, Z)    Z-FFT local
+#   xchg 1  over ax1 (row communicator):   split Z, concat Y
+#           (X/p0, Y, Z/p1)    Y-FFT local
+#   xchg 2  over ax0 (column communicator): split Y, concat X
+#           (X,   Y/p0, Z/p1)  X-FFT local
+#
+# Communication stays within row/column communicators — the P3DFFT advantage
+# the paper cites over slab decomposition.  The inverses retrace the same
+# exchanges backwards, so each mesh axis keeps its chosen comm backend in
+# both directions.
 
 
-def plan_comm(n: int, m: int, p: int, hw=None,
-              overlap_capable: bool = True) -> str:
-    """Choose the communication backend for an (n x m) slab FFT on p chips.
-
-    Cost model (per device, per exchange):
-      collective: wire = 2 * (p-1)/p * slab_bytes           (two all_to_alls)
-      pipelined:  same wire, exposed time ~ 1/chunks, but adds one slab
-                  read+write of HBM traffic for the chunk copies
-      agas:       wire = 2 * (p-1) * slab_bytes              (never chosen)
-    The monolithic collective wins when the exchange is small relative to
-    compute (it fuses best); pipelining wins when exposed-comm would exceed
-    ~20% of the local FFT compute time and overlap hardware exists.
-    """
-    from .plan import TPU_V5E
-    hw = hw or TPU_V5E
-    mh_pad = padded_half(m, p)
-    slab_bytes = (n / p) * mh_pad * 8.0
-    wire = 2.0 * (p - 1) / p * slab_bytes
-    t_comm = wire / hw.link_bw
-    # local compute: four-step matmul flops for rows + cols
-    from .algo import default_factorization
-    flops = 8.0 * (n / p) * mh_pad * (sum(default_factorization(m // 2))
-                                      + sum(default_factorization(n)))
-    t_comp = flops / hw.flops
-    if overlap_capable and t_comm > 0.2 * t_comp:
-        return "pipelined"
-    return "collective"
-
-
-# ---------------------------------------------------------------------------
-# pencil-decomposed 3D c2c FFT (P3DFFT-style, 2D mesh)
-# ---------------------------------------------------------------------------
+def _pencil_backends(comm, axes, chunks, planner, shape, mesh, kind):
+    """Resolve the per-axis comm backends for a pencil transform."""
+    if comm == "auto":
+        p0, p1 = mesh.shape[axes[0]], mesh.shape[axes[1]]
+        comm = plan_comm_pencil(shape, (p0, p1), hw=planner.hw, kind=kind)
+    return resolve_axis_backends(comm, axes, chunks=chunks)
 
 
 def fft3_pencil(x: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
-                planner: Optional[Planner] = None) -> Complex:
+                planner: Optional[Planner] = None,
+                comm: CommSpec = "collective", chunks: int = 4) -> Complex:
     """3D c2c FFT of (X, Y, Z) sharded (P(ax0), P(ax1), None).
 
-    Pencil decomposition: Z-FFT local; all_to_all over ``axes[1]`` swaps Y
-    in; Y-FFT; all_to_all over ``axes[0]`` swaps X in; X-FFT.  Communication
-    stays within row/column communicators — the P3DFFT advantage the paper
-    cites over slab decomposition.  Output sharded (None, P(ax0), P(ax1))
-    over (X -> local, Y, Z).
+    Output sharded (None, P(ax0), P(ax1)) over (X -> local, Y, Z).  ``comm``
+    may be one spec for both communicators, a per-axis ``(ax0_spec,
+    ax1_spec)`` pair, a dict keyed by mesh-axis name, or ``"auto"``.
     """
     planner = planner or Planner(backends=("jnp",))
     nx, ny, nz = x[0].shape
+    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
+                              (nx, ny, nz), mesh, "c2c")
     plan_z = planner.plan(nz, kind="c2c")
     plan_y = planner.plan(ny, kind="c2c")
     plan_x = planner.plan(nx, kind="c2c")
     ax0, ax1 = axes
+    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
 
     def local(cr: jax.Array, ci: jax.Array) -> Complex:
         z = execute(plan_z, (cr, ci))                           # FFT along Z
         # bring Y local: exchange Z<->Y within the ax1 communicator
-        z = _a2a(z, ax1, split=2, concat=1)                     # (x/p0, y, z/p1)
+        z = b1.exchange(z, ax1, split=2, concat=1, p=p1)        # (x/p0, y, z/p1)
         zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
         zy = execute(plan_y, zt)                                # FFT along Y
         zy = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
         # bring X local: exchange Y<->X within the ax0 communicator
-        zy = _a2a(zy, ax0, split=1, concat=0)                   # (x, y/p0, z/p1)
+        zy = b0.exchange(zy, ax0, split=1, concat=0, p=p0)      # (x, y/p0, z/p1)
         zx = (jnp.moveaxis(zy[0], 0, -1), jnp.moveaxis(zy[1], 0, -1))
         zz = execute(plan_x, zx)                                # FFT along X
         return jnp.moveaxis(zz[0], -1, 0), jnp.moveaxis(zz[1], -1, 0)
 
-    return jax.shard_map(local, mesh=mesh,
-                         in_specs=(P(ax0, ax1, None), P(ax0, ax1, None)),
-                         out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x[0], x[1])
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(ax0, ax1, None), P(ax0, ax1, None)),
+                     out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x[0], x[1])
+
+
+def ifft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                 planner: Optional[Planner] = None,
+                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
+    """Inverse of :func:`fft3_pencil`: (X, Y/p0, Z/p1) spectrum back to the
+    (X/p0, Y/p1, Z) spatial layout.  Retraces the forward exchanges in
+    reverse, per-axis comm backends as in the forward direction."""
+    planner = planner or Planner(backends=("jnp",))
+    nx, ny, nz = c[0].shape                                     # global shape
+    ax0, ax1 = axes
+    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
+    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
+                              (nx, ny, nz), mesh, "c2c")
+    plan_z = planner.plan(nz, kind="c2c")
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+
+    def local(cr: jax.Array, ci: jax.Array) -> Complex:
+        z = (cr, ci)                                            # (x, y/p0, z/p1)
+        zx = (jnp.moveaxis(z[0], 0, -1), jnp.moveaxis(z[1], 0, -1))
+        zx = execute_inverse(plan_x, zx)                        # inverse X
+        z = (jnp.moveaxis(zx[0], -1, 0), jnp.moveaxis(zx[1], -1, 0))
+        z = b0.exchange(z, ax0, split=0, concat=1, p=p0)        # (x/p0, y, z/p1)
+        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
+        zy = execute_inverse(plan_y, zt)                        # inverse Y
+        z = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
+        z = b1.exchange(z, ax1, split=1, concat=2, p=p1)        # (x/p0, y/p1, z)
+        return execute_inverse(plan_z, z)                       # inverse Z
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(None, ax0, ax1), P(None, ax0, ax1)),
+                     out_specs=(P(ax0, ax1, None), P(ax0, ax1, None)))(c[0], c[1])
+
+
+def rfft3_pencil(x: jax.Array, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                 planner: Optional[Planner] = None,
+                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
+    """3D r2c FFT of a real (X, Y, Z) array sharded (P(ax0), P(ax1), None).
+
+    The contiguous Z axis gets the r2c transform; its half spectrum is
+    zero-padded to ``padded_half(Z, p1)`` for collective divisibility, the
+    same convention as the 2D slab path.  Output: (re, im) of global shape
+    (X, Y, zh_pad) sharded (None, P(ax0), P(ax1)) — crop the last axis to
+    Z//2+1 for the exact ``numpy.fft.rfftn``.
+    """
+    planner = planner or Planner(backends=("jnp",))
+    nx, ny, nz = x.shape
+    ax0, ax1 = axes
+    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
+    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
+                              (nx, ny, nz), mesh, "r2c")
+    zh_pad = padded_half(nz, p1)
+    plan_z = planner.plan(nz, kind="r2c")
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+
+    def local(xl: jax.Array) -> Complex:
+        z = _local_rows_rfft(xl, plan_z, zh_pad)                # (x/p0, y/p1, zh_pad)
+        z = b1.exchange(z, ax1, split=2, concat=1, p=p1)        # (x/p0, y, zh_pad/p1)
+        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
+        zy = execute(plan_y, zt)                                # FFT along Y
+        zy = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
+        zy = b0.exchange(zy, ax0, split=1, concat=0, p=p0)      # (x, y/p0, zh_pad/p1)
+        zx = (jnp.moveaxis(zy[0], 0, -1), jnp.moveaxis(zy[1], 0, -1))
+        zz = execute(plan_x, zx)                                # FFT along X
+        return jnp.moveaxis(zz[0], -1, 0), jnp.moveaxis(zz[1], -1, 0)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=P(ax0, ax1, None),
+                     out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x)
+
+
+def irfft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                  nz: int, planner: Optional[Planner] = None,
+                  comm: CommSpec = "collective",
+                  chunks: int = 4) -> jax.Array:
+    """Inverse of :func:`rfft3_pencil` back to a real (X, Y, Z) array.
+
+    Takes the *uncropped* padded spectrum (global (X, Y, zh_pad), sharded
+    (None, P(ax0), P(ax1))) plus the original Z length ``nz``, mirroring
+    :func:`ifft2_slab`'s padded-half cropping."""
+    planner = planner or Planner(backends=("jnp",))
+    nx, ny = c[0].shape[0], c[0].shape[1]                       # global shape
+    ax0, ax1 = axes
+    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
+    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
+                              (nx, ny, nz), mesh, "c2r")
+    zh = nz // 2 + 1
+    plan_zr = planner.plan(nz, kind="c2r")
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+
+    def local(cr: jax.Array, ci: jax.Array) -> jax.Array:
+        z = (cr, ci)                                            # (x, y/p0, zh_pad/p1)
+        zx = (jnp.moveaxis(z[0], 0, -1), jnp.moveaxis(z[1], 0, -1))
+        zx = execute_inverse(plan_x, zx)                        # inverse X
+        z = (jnp.moveaxis(zx[0], -1, 0), jnp.moveaxis(zx[1], -1, 0))
+        z = b0.exchange(z, ax0, split=0, concat=1, p=p0)        # (x/p0, y, zh_pad/p1)
+        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
+        zy = execute_inverse(plan_y, zt)                        # inverse Y
+        z = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
+        z = b1.exchange(z, ax1, split=1, concat=2, p=p1)        # (x/p0, y/p1, zh_pad)
+        z = (z[0][..., :zh], z[1][..., :zh])                    # crop padding
+        return execute(plan_zr, z)                              # c2r along Z
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(None, ax0, ax1), P(None, ax0, ax1)),
+                     out_specs=P(ax0, ax1, None))(c[0], c[1])

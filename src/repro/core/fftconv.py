@@ -14,8 +14,9 @@ Two beyond-paper TPU optimizations are first-class here:
   only the two all_to_all exchanges of the paper's algorithm remain, fwd and
   bwd (4 total), versus 6 exchanges for an order-preserving pipeline.
 
-* **Overlap-ready chunked exchanges** (`comm="pipelined"`), inherited from
-  :mod:`repro.core.dfft`.
+* **Overlap-ready chunked exchanges** (`comm="pipelined"`), via the shared
+  exchange layer in :mod:`repro.core.comm` — the same swappable backends the
+  slab/pencil paths in :mod:`repro.core.dfft` use.
 
 The distributed 1D FFT views the length-L signal as an (N1, N2) matrix
 (row-major), sharded over n1 — the paper's own 2D framing of the problem:
@@ -27,7 +28,6 @@ The distributed 1D FFT views the length-L signal as an (N1, N2) matrix
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -36,6 +36,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import algo
+from .comm import CommBackend, get_backend
+from .compat import shard_map
 from .plan import Planner
 
 Complex = algo.Complex
@@ -106,13 +108,15 @@ def fft_conv(u: jax.Array, k: jax.Array, planner: Optional[Planner] = None,
 
 
 def _dist_fft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
-                       sign: int, planner: Planner) -> Complex:
+                       sign: int, planner: Planner,
+                       backend: Optional[CommBackend] = None) -> Complex:
     """Distributed c2c FFT along axis 1 of local (B, Lloc, D) blocks.
 
     Global length N = n1 * n2, row-major (n1, n2), sharded over n1.
     Returns C[k1, k2] (permuted order), k1-sharded: local (B, Lloc, D).
     """
     from .plan import execute
+    backend = backend or get_backend("collective")
     bsz, lloc, d = x[0].shape
     n1loc = n1 // p
     assert lloc == n1loc * n2, (lloc, n1, n2, p)
@@ -124,7 +128,7 @@ def _dist_fft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
 
     a = (r4(x[0]), r4(x[1]))
     # stage A: columns local
-    a = _a2a4(a, axis, split=2, concat=1)                       # (B, n1, n2/p, D)
+    a = backend.exchange(a, axis, split=2, concat=1, p=p)       # (B, n1, n2/p, D)
     at = (jnp.moveaxis(a[0], 1, -1), jnp.moveaxis(a[1], 1, -1))  # n1 last
     bt = execute(plan1, at) if sign < 0 else _inv_exec(plan1, at)
     bm = (jnp.moveaxis(bt[0], -1, 1), jnp.moveaxis(bt[1], -1, 1))
@@ -136,7 +140,7 @@ def _dist_fft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
     twi = jax.lax.dynamic_slice_in_dim(tw[1], me * w, w, 1)
     btw = algo.cmul(bm, (twr[None, :, :, None], twi[None, :, :, None]))
     # stage B: rows local
-    c = _a2a4(btw, axis, split=1, concat=2)                     # (B, n1/p, n2, D)
+    c = backend.exchange(btw, axis, split=1, concat=2, p=p)     # (B, n1/p, n2, D)
     ct = (jnp.moveaxis(c[0], 2, -1), jnp.moveaxis(c[1], 2, -1))  # n2 last
     dt = execute(plan2, ct) if sign < 0 else _inv_exec(plan2, ct)
     dm = (jnp.moveaxis(dt[0], -1, 2), jnp.moveaxis(dt[1], -1, 2))
@@ -149,16 +153,12 @@ def _inv_exec(plan, x):
                     karatsuba=plan.karatsuba)
 
 
-def _a2a4(c: Complex, axis: str, split: int, concat: int) -> Complex:
-    f = functools.partial(jax.lax.all_to_all, axis_name=axis,
-                          split_axis=split, concat_axis=concat, tiled=True)
-    return f(c[0]), f(c[1])
-
-
 def _dist_ifft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
-                        planner: Planner) -> Complex:
+                        planner: Planner,
+                        backend: Optional[CommBackend] = None) -> Complex:
     """Inverse of :func:`_dist_fft_permuted` (consumes permuted order)."""
     from .plan import execute
+    backend = backend or get_backend("collective")
     bsz, lloc, d = x[0].shape
     n1loc = n1 // p
     n = n1 * n2
@@ -177,12 +177,12 @@ def _dist_ifft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
     twi = jax.lax.dynamic_slice_in_dim(tw[1], me * n1loc, n1loc, 0)
     b = algo.cmul(b, (twr[None, :, :, None], twi[None, :, :, None]))
     # all_to_all -> columns local; inverse DFT along k1
-    a = _a2a4(b, axis, split=2, concat=1)                       # (B, n1, n2/p, D)
+    a = backend.exchange(b, axis, split=2, concat=1, p=p)       # (B, n1, n2/p, D)
     at = (jnp.moveaxis(a[0], 1, -1), jnp.moveaxis(a[1], 1, -1))
     ot = _inv_exec(plan1, at)
     o = (jnp.moveaxis(ot[0], -1, 1), jnp.moveaxis(ot[1], -1, 1))
     # back to row-sharded layout
-    o = _a2a4(o, axis, split=1, concat=2)                       # (B, n1/p, n2, D)
+    o = backend.exchange(o, axis, split=1, concat=2, p=p)       # (B, n1/p, n2, D)
     scale = 1.0 / n
     return (o[0].reshape(bsz, lloc, d) * scale,
             o[1].reshape(bsz, lloc, d) * scale)
@@ -190,13 +190,17 @@ def _dist_ifft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
 
 def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
                          mesh: jax.sharding.Mesh, axis: str,
-                         planner: Optional[Planner] = None) -> jax.Array:
+                         planner: Optional[Planner] = None,
+                         comm: str = "collective",
+                         chunks: int = 4) -> jax.Array:
     """Causal FFT convolution with the sequence sharded over ``axis``.
 
     u: (B, L, D) with L sharded; k: (D, L_full) replicated filters.
     The paper's distributed algorithm, transposed-order end to end.
+    ``comm`` picks the exchange backend (see :mod:`repro.core.comm`).
     """
     planner = planner or Planner(backends=("jnp",))
+    backend = get_backend(comm, chunks=chunks)
     b, l, d = u.shape
     p = mesh.shape[axis]
     nf = next_fft_len(2 * l)
@@ -216,13 +220,13 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
     def local(ul: jax.Array, kl: jax.Array) -> jax.Array:
         klt = kl.T[None]                                        # (1, nf/p, D)
         uf = _dist_fft_permuted((ul, jnp.zeros_like(ul)), axis, p, n1, n2,
-                                -1, planner)
+                                -1, planner, backend)
         kf = _dist_fft_permuted((klt, jnp.zeros_like(klt)), axis, p, n1, n2,
-                                -1, planner)
+                                -1, planner, backend)
         prod = algo.cmul(uf, kf)
-        return _dist_ifft_permuted(prod, axis, p, n1, n2, planner)[0]
+        return _dist_ifft_permuted(prod, axis, p, n1, n2, planner, backend)[0]
 
-    y = jax.shard_map(
+    y = shard_map(
         local, mesh=mesh,
         in_specs=(P(None, axis, None), P(None, axis)),
         out_specs=P(None, axis, None),

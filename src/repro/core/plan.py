@@ -185,6 +185,24 @@ class Planner:
             os.replace(tmp, self.wisdom_path)
         return best
 
+    # -- communication planning (paper §5.3: parcelport choice) ---------------
+
+    def plan_comm(self, n: int, m: int, p: int,
+                  overlap_capable: bool = True) -> str:
+        """Pick the slab exchange backend for this planner's hardware
+        (delegates to :func:`repro.core.comm.plan_comm`)."""
+        from .comm import plan_comm
+        return plan_comm(n, m, p, hw=self.hw,
+                         overlap_capable=overlap_capable)
+
+    def plan_comm_pencil(self, shape, mesh_shape, kind: str = "c2c",
+                         overlap_capable: bool = True):
+        """Pick per-mesh-axis pencil exchange backends for this planner's
+        hardware (delegates to :func:`repro.core.comm.plan_comm_pencil`)."""
+        from .comm import plan_comm_pencil
+        return plan_comm_pencil(shape, mesh_shape, hw=self.hw,
+                                overlap_capable=overlap_capable, kind=kind)
+
     # -- measured planning (FFTW MEASURE) -------------------------------------
 
     def _measure(self, cands: Sequence[Plan], n: int, kind: str, batch: int) -> Plan:

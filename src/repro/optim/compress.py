@@ -8,18 +8,20 @@ quantization error is re-injected next step (Karimireddy et al., EF-SGD),
 keeping convergence intact.
 
 ``compressed_psum`` is a shard_map-level collective: quantize locally,
-all_gather the int8 payload + scales over ``axis``, dequantize-and-sum
+all_gather the int8 payload + scales over ``axis`` (through the shared
+pair-collective layer in :mod:`repro.core.comm`), dequantize-and-sum
 locally.  For p pods the wire cost is p * (n + n/block * 2) bytes vs
 2 * 4n * (p-1)/p for the f32 ring.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.comm import all_gather_pair
 
 BLOCK = 256
 
@@ -58,8 +60,8 @@ def compressed_psum(x: jax.Array, axis_name: str,
     local_deq = dequantize_int8(q, scale, pad, xf.shape)
     new_error = xf - local_deq
 
-    qg = jax.lax.all_gather(q, axis_name)                       # (P, nb, B) int8
-    sg = jax.lax.all_gather(scale, axis_name)                   # (P, nb, 1) bf16
+    qg, sg = all_gather_pair((q, scale), axis_name)             # (P, nb, B) int8,
+    #                                                             (P, nb, 1) bf16
     deq = qg.astype(jnp.float32) * sg.astype(jnp.float32)
     total = jnp.sum(deq, axis=0).reshape(-1)
     if pad:

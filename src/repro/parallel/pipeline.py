@@ -20,15 +20,22 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import legacy_partial_manual, pvary, ring_shift
+
 
 def pipeline_stages(stage_fn: Callable[[Any, jax.Array], jax.Array],
-                    stage_params: Any, x_mb: jax.Array, axis: str):
+                    stage_params: Any, x_mb: jax.Array, axis: str,
+                    me: jax.Array | None = None):
     """Like :func:`pipeline_forward` but WITHOUT the final broadcast: returns
     (outs, my_stage_index, num_stages) where ``outs`` holds valid microbatch
     outputs only on the last stage (zeros elsewhere).  Callers that reduce to
     a scalar (the LM loss) mask by stage and psum — no activation ever
-    crosses the pod axis outside the ppermute ring."""
-    return _pipeline_impl(stage_fn, stage_params, x_mb, axis)
+    crosses the pod axis outside the ppermute ring.
+
+    ``me`` optionally supplies the caller's stage index as data (an iota
+    sharded over ``axis``) — REQUIRED under partial-manual shard_map on JAX
+    0.4.x, where ``axis_index`` cannot lower (see repro.core.compat)."""
+    return _pipeline_impl(stage_fn, stage_params, x_mb, axis, me)
 
 
 def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -51,16 +58,36 @@ def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
     return outs_all[s - 1]
 
 
-def _pipeline_impl(stage_fn, stage_params, x_mb, axis: str):
+def _pipeline_impl(stage_fn, stage_params, x_mb, axis: str, me=None):
     s = jax.lax.psum(1, axis)                                   # stage count
-    me = jax.lax.axis_index(axis)
+    if me is None:          # full-manual meshes: axis_index lowers everywhere
+        me = jax.lax.axis_index(axis)
     m = x_mb.shape[0]
     ticks = m + s - 1
-    fwd_perm = [(i, (i + 1) % s) for i in range(s)]
+    # The injected microbatch is only CONSUMED on stage 0, where t - me == t,
+    # so the schedule index stays axis-invariant — required on JAX 0.4.x,
+    # whose partitioner cannot lower a manual-axis-varying gather of a
+    # region input.
+
+    if legacy_partial_manual():
+        # 0.4.x partial-manual region: GSPMD cannot partition a while-loop
+        # whose body mixes manual-subgroup collectives with gathers of
+        # region inputs (hlo_sharding_util CHECK failure), so the tick loop
+        # unrolls — ticks is static and small (M + S - 1).
+        buf = pvary(jnp.zeros(x_mb.shape[1:], x_mb.dtype), (axis,))
+        ys = []
+        for t in range(ticks):
+            inp = jnp.where(me == 0, x_mb[min(t, m - 1)], buf)
+            ys.append(stage_fn(stage_params, inp))
+            buf = ring_shift(ys[-1], axis, me, s)
+        # tick t completes microbatch t - (s-1) on the last stage
+        outs = jnp.stack(ys[s - 1:s - 1 + m])
+        outs = jnp.where(me == s - 1, outs, jnp.zeros_like(outs))
+        return outs, me, s
 
     def tick(carry, t):
         buf, outs = carry                                       # buf: (mb, ...)
-        mb_idx = jnp.clip(t - me, 0, m - 1)
+        mb_idx = jnp.clip(t, 0, m - 1)
         inject = jax.lax.dynamic_index_in_dim(x_mb, mb_idx, 0, keepdims=False)
         inp = jnp.where(me == 0, inject, buf)
         out = stage_fn(stage_params, inp)
@@ -69,12 +96,12 @@ def _pipeline_impl(stage_fn, stage_params, x_mb, axis: str):
         store = jnp.logical_and(me == s - 1, t >= s - 1)
         upd = jax.lax.dynamic_update_index_in_dim(outs, out, done_idx, 0)
         outs = jnp.where(store, upd, outs)
-        buf = jax.lax.ppermute(out, axis, fwd_perm)
+        buf = ring_shift(out, axis, me, s)
         return (buf, outs), None
 
     out_shape = jax.eval_shape(stage_fn, stage_params, x_mb[0])
-    buf0 = jax.lax.pvary(jnp.zeros(x_mb.shape[1:], x_mb.dtype), (axis,))
-    outs0 = jax.lax.pvary(
+    buf0 = pvary(jnp.zeros(x_mb.shape[1:], x_mb.dtype), (axis,))
+    outs0 = pvary(
         jnp.zeros((m,) + out_shape.shape, out_shape.dtype), (axis,))
     (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
     return outs, me, s

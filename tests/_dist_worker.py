@@ -17,6 +17,7 @@ import numpy as np              # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import dfft, fftconv, plan          # noqa: E402
+from repro.core.compat import shard_map             # noqa: E402
 from repro.models import lm                         # noqa: E402
 from repro.optim import compressed_psum             # noqa: E402
 from repro.parallel import pipeline_forward         # noqa: E402
@@ -41,10 +42,11 @@ def check_fft2_slab():
             assert err < 1e-4, (comm, chunks, err)
             if comm != "pipelined":
                 break
-        # distribution invariance: distributed == single-device oracle
-    back = dfft.ifft2_slab(dfft.fft2_slab(xs, mesh, "fft", PLANNER),
-                           mesh, "fft", m, PLANNER)
-    assert np.max(np.abs(np.asarray(back) - x)) < 1e-4
+        # roundtrip per backend (ifft2_slab honors comm too)
+        back = dfft.ifft2_slab(dfft.fft2_slab(xs, mesh, "fft", PLANNER,
+                                              comm=comm),
+                               mesh, "fft", m, PLANNER, comm=comm)
+        assert np.max(np.abs(np.asarray(back) - x)) < 1e-4, comm
     # permuted-order columns (digit-transpose elision) roundtrip
     x2 = RNG.standard_normal((256, 256)).astype(np.float32)
     xs2 = jax.device_put(x2, NamedSharding(mesh, P("fft", None)))
@@ -66,12 +68,48 @@ def check_fft3_pencil():
                            NamedSharding(mesh, P("mx", "my", None))),
             jax.device_put(np.imag(x).astype(np.float32),
                            NamedSharding(mesh, P("mx", "my", None))))
-    rr, ri = dfft.fft3_pencil(pair, mesh, ("mx", "my"), PLANNER)
     ref = np.fft.fftn(x)
-    err = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref)) \
-        / np.max(np.abs(ref))
-    assert err < 1e-4, err
+    refmax = np.max(np.abs(ref))
+    # every comm backend: forward == numpy oracle AND full inverse roundtrip
+    for comm in dfft.COMM_BACKENDS:
+        rr, ri = dfft.fft3_pencil(pair, mesh, ("mx", "my"), PLANNER,
+                                  comm=comm)
+        err = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref)) \
+            / refmax
+        assert err < 1e-4, (comm, err)
+        br, bi = dfft.ifft3_pencil((rr, ri), mesh, ("mx", "my"), PLANNER,
+                                   comm=comm)
+        back = np.asarray(br) + 1j * np.asarray(bi)
+        assert np.max(np.abs(back - x)) < 1e-4, comm
+    # per-axis backend selection: row/column communicators differ
+    for comm in (("pipelined", "collective"), {"my": "agas"}, "auto"):
+        rr, ri = dfft.fft3_pencil(pair, mesh, ("mx", "my"), PLANNER,
+                                  comm=comm)
+        err = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref)) \
+            / refmax
+        assert err < 1e-4, (comm, err)
     print("PASS fft3_pencil")
+
+
+def check_rfft3_pencil():
+    mesh = jax.make_mesh((4, 2), ("mx", "my"))
+    nx, ny, nz = 16, 32, 64
+    x = RNG.standard_normal((nx, ny, nz)).astype(np.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("mx", "my", None)))
+    ref = np.fft.rfftn(x)
+    refmax = np.max(np.abs(ref))
+    for comm in dfft.COMM_BACKENDS:
+        re, im = dfft.rfft3_pencil(xs, mesh, ("mx", "my"), PLANNER,
+                                   comm=comm)
+        z = (np.asarray(re)[..., :nz // 2 + 1]
+             + 1j * np.asarray(im)[..., :nz // 2 + 1])
+        err = np.max(np.abs(z - ref)) / refmax
+        assert err < 1e-4, (comm, err)
+        # c2r roundtrip through the padded half spectrum
+        back = dfft.irfft3_pencil((re, im), mesh, ("mx", "my"), nz, PLANNER,
+                                  comm=comm)
+        assert np.max(np.abs(np.asarray(back) - x)) < 1e-4, comm
+    print("PASS rfft3_pencil")
 
 
 def check_fftconv_seq_sharded():
@@ -86,9 +124,11 @@ def check_fftconv_seq_sharded():
         * np.fft.rfft(np.pad(k.T[None], ((0, 0), (0, nf - l), (0, 0))), axis=1),
         axis=1, n=nf)[:, :l, :]
     us = jax.device_put(u, NamedSharding(mesh, P(None, "sp", None)))
-    y = fftconv.fft_conv_seq_sharded(us, jnp.asarray(k), mesh, "sp", PLANNER)
-    err = np.max(np.abs(np.asarray(y) - ref)) / np.max(np.abs(ref))
-    assert err < 1e-4, err
+    for comm in dfft.COMM_BACKENDS:
+        y = fftconv.fft_conv_seq_sharded(us, jnp.asarray(k), mesh, "sp",
+                                         PLANNER, comm=comm)
+        err = np.max(np.abs(np.asarray(y) - ref)) / np.max(np.abs(ref))
+        assert err < 1e-4, (comm, err)
     print("PASS fftconv_seq_sharded")
 
 
@@ -100,7 +140,7 @@ def check_compressed_psum():
         out, err = compressed_psum(x[0], "pod")
         return out[None], err[None]
 
-    out, err = jax.jit(jax.shard_map(
+    out, err = jax.jit(shard_map(
         body, mesh=mesh, in_specs=P("pod", None),
         out_specs=(P("pod", None), P("pod", None))))(xs)
     ref = xs.sum(axis=0)
@@ -124,7 +164,7 @@ def check_pipeline_forward():
     def run(w_all, xin):
         return pipeline_forward(stage, w_all, xin, "pod")
 
-    y = jax.jit(jax.shard_map(
+    y = jax.jit(shard_map(
         run, mesh=mesh, in_specs=(P("pod", None, None), P(None, None, None)),
         out_specs=P(None, None, None), check_vma=False))(w, x)
     # reference: sequential stages
@@ -136,7 +176,7 @@ def check_pipeline_forward():
 
     # differentiability (GPipe backward through ppermute)
     def loss(w_all):
-        return jnp.sum(jax.shard_map(
+        return jnp.sum(shard_map(
             run, mesh=mesh, in_specs=(P("pod", None, None),
                                       P(None, None, None)),
             out_specs=P(None, None, None), check_vma=False)(w_all, x) ** 2)
@@ -259,6 +299,7 @@ def check_serve_profile_equivalence():
 if __name__ == "__main__":
     check_fft2_slab()
     check_fft3_pencil()
+    check_rfft3_pencil()
     check_fftconv_seq_sharded()
     check_compressed_psum()
     check_pipeline_forward()

@@ -1,0 +1,104 @@
+"""Unit tests for the comm-backend subsystem (single device, fast).
+
+Exchange *numerics* across real multi-device meshes live in
+tests/_dist_worker.py; here we cover spec resolution, the roofline
+planners, and the degenerate p=1 exchange (which also smoke-tests the
+jax.shard_map compat shim inside tier-1's fast path).
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import comm
+from repro.core.compat import shard_map
+
+
+def test_get_backend_resolution():
+    assert isinstance(comm.get_backend("collective"), comm.CollectiveBackend)
+    assert isinstance(comm.get_backend("agas"), comm.AgasBackend)
+    b = comm.get_backend("pipelined", chunks=6)
+    assert isinstance(b, comm.PipelinedBackend) and b.chunks == 6
+    # inline chunk override spelling
+    assert comm.get_backend("pipelined:8").chunks == 8
+    # idempotent on instances
+    assert comm.get_backend(b) is b
+    with pytest.raises(ValueError):
+        comm.get_backend("parcelport")
+    with pytest.raises(TypeError):
+        comm.get_backend(42)
+
+
+def test_resolve_axis_backends():
+    axes = ("mx", "my")
+    # one spec fans out to every axis
+    b = comm.resolve_axis_backends("pipelined", axes)
+    assert [x.name for x in b] == ["pipelined", "pipelined"]
+    # per-axis sequence, ordered as axes
+    b = comm.resolve_axis_backends(("collective", "agas"), axes)
+    assert [x.name for x in b] == ["collective", "agas"]
+    # dict keyed by mesh-axis name; missing axes default to collective
+    b = comm.resolve_axis_backends({"my": "pipelined:2"}, axes)
+    assert [x.name for x in b] == ["collective", "pipelined"]
+    assert b[1].chunks == 2
+    with pytest.raises(ValueError):
+        comm.resolve_axis_backends(("collective",), axes)
+    # a typo'd mesh-axis key must not silently fall back to collective
+    with pytest.raises(ValueError):
+        comm.resolve_axis_backends({"mz": "agas"}, axes)
+
+
+def test_plan_comm_pencil_model():
+    from repro.core.plan import HardwareSpec
+    fast_link = HardwareSpec("x", flops=1e14, hbm_bw=1e12, link_bw=1e13,
+                             matmul_dim=128, vmem_bytes=1 << 27)
+    slow_link = HardwareSpec("y", flops=1e15, hbm_bw=1e12, link_bw=1e8,
+                             matmul_dim=128, vmem_bytes=1 << 27)
+    shape, mesh_shape = (1 << 10, 1 << 10, 1 << 10), (16, 16)
+    assert comm.plan_comm_pencil(shape, mesh_shape, hw=fast_link) == \
+        ("collective", "collective")
+    assert comm.plan_comm_pencil(shape, mesh_shape, hw=slow_link) == \
+        ("pipelined", "pipelined")
+    assert comm.plan_comm_pencil(shape, mesh_shape, hw=slow_link,
+                                 overlap_capable=False) == \
+        ("collective", "collective")
+    # a trivial communicator never pipelines
+    assert comm.plan_comm_pencil(shape, (1, 16), hw=slow_link)[0] == \
+        "collective"
+
+
+def test_planner_comm_methods():
+    from repro.core.plan import HardwareSpec, Planner
+    slow_link = HardwareSpec("y", flops=1e15, hbm_bw=1e12, link_bw=1e8,
+                             matmul_dim=128, vmem_bytes=1 << 27)
+    pl = Planner(hardware=slow_link, backends=("jnp",))
+    assert pl.plan_comm(1 << 14, 1 << 14, 256) == "pipelined"
+    assert pl.plan_comm_pencil((1 << 10,) * 3, (16, 16)) == \
+        ("pipelined", "pipelined")
+
+
+def test_exchange_identity_on_one_device():
+    """p=1: every backend's exchange must be the identity redistribution."""
+    mesh = jax.make_mesh((1,), ("ax",))
+    x = np.arange(24, dtype=np.float32).reshape(4, 6)
+    pair = (x, -x)
+    for spec in comm.COMM_BACKENDS:
+        backend = comm.get_backend(spec, chunks=3)
+
+        def local(a, b, _bk=backend):
+            return _bk.exchange((a, b), "ax", split=1, concat=0, p=1)
+
+        re, im = shard_map(local, mesh=mesh,
+                           in_specs=(P("ax", None), P("ax", None)),
+                           out_specs=(P(None, "ax"), P(None, "ax")))(*pair)
+        np.testing.assert_allclose(np.asarray(re), x)
+        np.testing.assert_allclose(np.asarray(im), -x)
+
+
+def test_dfft_reexports_stable():
+    """plan_comm / COMM_BACKENDS keep their historical dfft home."""
+    from repro.core import dfft
+    assert dfft.COMM_BACKENDS == ("collective", "pipelined", "agas")
+    assert dfft.plan_comm is comm.plan_comm
+    assert dfft.padded_half(512, 8) % 8 == 0

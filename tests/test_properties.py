@@ -1,9 +1,12 @@
 """Hypothesis property tests on the FFT system's mathematical invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import algo
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import algo  # noqa: E402
 
 SIZES = st.sampled_from([8, 16, 32, 64, 128, 256, 512])
 BATCH = st.integers(min_value=1, max_value=4)
