@@ -11,6 +11,13 @@ Covers both decompositions x every comm backend: the 1D slab layout (8-way
 mesh, 2D r2c) and the 2D pencil layout (4x2 mesh, 3D c2c with row/column
 communicators), plus mixed per-axis backend selection on the pencil path.
 
+A final section reproduces the paper's plan-mode trade-off at the
+communication layer: for each workload it reports the backend the roofline
+ESTIMATE picks vs the backend on-mesh MEASURE picks (comm="measure"),
+the one-off measurement cost, and the wall time of the measured choice —
+plus proof that the second measured call is a pure wisdom hit (zero timing
+probes).
+
 The multi-device part runs in a subprocess (device-count override is
 process-local).
 """
@@ -38,10 +45,13 @@ def run() -> None:
 
 
 def _worker() -> None:
+    import time
+
     import jax
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.core import comm as comm_mod
     from repro.core import dfft, plan
     from repro.launch.dryrun import parse_collectives
 
@@ -119,6 +129,42 @@ def _worker() -> None:
     emit(f"fig6/pencil_r2c_auto/x{nx}y{ny}z{nz}", t,
          f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
          f"n_collectives={sum(counts.values())}")
+
+    # ------------------------------------------------------------------
+    # estimate vs measure: the paper's plan-mode trade-off applied to the
+    # parcelport choice, side by side (Figs. 3-5 logic at the comm layer)
+    # ------------------------------------------------------------------
+    for n in (256, 512):
+        x = rng.standard_normal((n, n)).astype(np.float32)
+        xs = jax.device_put(x, NamedSharding(mesh, P("fft", None)))
+        est_choice = comm_mod.plan_comm(n, n, 8, hw=planner.hw)
+        t0 = time.perf_counter()
+        meas_choice = comm_mod.measure_comm_slab(n, n, mesh, "fft",
+                                                 wisdom=planner.wisdom)
+        plan_cost = time.perf_counter() - t0
+        t_meas = time_fn(jax.jit(lambda a, _c=meas_choice: dfft.fft2_slab(
+            a, mesh, "fft", planner, comm=_c)), xs)
+        t_est = time_fn(jax.jit(lambda a, _c=est_choice: dfft.fft2_slab(
+            a, mesh, "fft", planner, comm=_c)), xs)
+        # second measured call: pure wisdom hit, zero timing probes
+        probes = comm_mod.MEASURE_STATS["timed"]
+        comm_mod.measure_comm_slab(n, n, mesh, "fft", wisdom=planner.wisdom)
+        assert comm_mod.MEASURE_STATS["timed"] == probes
+        emit(f"fig6/choice_slab/n{n}", t_meas,
+             f"estimate={est_choice};measured={meas_choice};"
+             f"t_estimate_choice={t_est * 1e3:.2f}ms;"
+             f"measure_cost_s={plan_cost:.2f};rehit_probes=0")
+    est0, est1 = comm_mod.plan_comm_pencil((nx, ny, nz), (4, 2),
+                                           hw=planner.hw)
+    t0 = time.perf_counter()
+    m0, m1 = comm_mod.measure_comm_pencil((nx, ny, nz), mesh2, ("mx", "my"),
+                                          wisdom=planner.wisdom)
+    plan_cost = time.perf_counter() - t0
+    t_meas = time_fn(jax.jit(lambda a, b, _c=(m0, m1): dfft.fft3_pencil(
+        (a, b), mesh2, ("mx", "my"), planner, comm=_c)), *pair)
+    emit(f"fig6/choice_pencil/x{nx}y{ny}z{nz}", t_meas,
+         f"estimate={est0}+{est1};measured={m0}+{m1};"
+         f"measure_cost_s={plan_cost:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
 """Distributed 2D FFT (the paper's §5.3 experiment) on 8 emulated devices:
-slab decomposition, explicit collectives, three communication backends.
+slab decomposition, explicit collectives, the comm backends, and the two
+backend-selection modes (roofline "auto" vs on-mesh-timed "measure").
 
     PYTHONPATH=src python examples/fft2d_distributed.py
+    PYTHONPATH=src python examples/fft2d_distributed.py --comm measure \
+        --wisdom /tmp/fft_wisdom.json   # rerun: zero re-measurement
 """
 
+import argparse
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -16,10 +20,23 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core import (Planner, fft2_slab, fft3_pencil, ifft2_slab,  # noqa: E402
                         ifft3_pencil, irfft3_pencil, rfft3_pencil)
 
+COMM_CHOICES = ("collective", "pipelined", "agas", "auto", "measure")
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--comm", choices=COMM_CHOICES, default=None,
+                    help="run a single exchange backend / selection mode "
+                         "(default: sweep them all)")
+    ap.add_argument("--wisdom", default=None,
+                    help="wisdom JSON path shared by plan + comm autotuners "
+                         "(comm=measure verdicts persist across runs)")
+    args = ap.parse_args()
+    sweep = COMM_CHOICES if args.comm is None else (args.comm,)
+
     mesh = jax.make_mesh((8,), ("fft",))
-    planner = Planner(mode="estimate", backends=("jnp",))
+    planner = Planner(mode="estimate", backends=("jnp",),
+                      wisdom_path=args.wisdom)
     rng = np.random.default_rng(0)
 
     n, m = 512, 512
@@ -27,7 +44,7 @@ def main() -> None:
     xs = jax.device_put(x, NamedSharding(mesh, P("fft", None)))
     ref = np.fft.rfft2(x)
 
-    for comm in ("collective", "pipelined", "agas"):
+    for comm in sweep:
         fn = jax.jit(lambda a, _c=comm: fft2_slab(a, mesh, "fft", planner,
                                                   comm=_c))
         out = jax.block_until_ready(fn(xs))
@@ -52,11 +69,17 @@ def main() -> None:
             jax.device_put(np.imag(xc).astype(np.float32),
                            NamedSharding(mesh2, P("mx", "my", None))))
     ref3 = np.fft.fftn(xc)
-    for comm in ("collective", "pipelined", "agas"):
+    for comm in sweep:
         rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner, comm=comm)
         err3 = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref3)) \
             / np.max(np.abs(ref3))
         print(f"fft3_pencil comm={comm:10s} (4x2 mesh) rel_err={err3:.2e}")
+    if args.wisdom:
+        from repro.core import comm as comm_mod
+        verdicts = {k: planner.wisdom.get(k)["backend"]
+                    for k in planner.wisdom.keys("comm/")}
+        print(f"comm wisdom at {args.wisdom}: {verdicts} "
+              f"(timing probes this run: {comm_mod.MEASURE_STATS['timed']})")
 
     # mixed per-axis selection: pipeline the row-communicator exchange only
     rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner,

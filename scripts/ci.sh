@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Headless CI entry point: the quick suite first for fast signal, then the
+# full tier-1 command (which adds the slow 8-fake-device subprocess suites —
+# the distributed comm/measure matrix in tests/_dist_worker.py).
+#
+#   scripts/ci.sh            # everything (what CI runs)
+#   scripts/ci.sh --fast     # only the quick suite (local pre-push check)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bash scripts/test_fast.sh
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exit 0
+fi
+
+# full tier-1: the fast tests rerun from cache-warm bytecode in seconds;
+# the real added cost is the multi-device distributed matrix.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q

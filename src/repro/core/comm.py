@@ -29,21 +29,38 @@ block d to participant d, concatenate received blocks along ``concat``".
 One implementation therefore serves the 2D slab layout, the 3D pencil
 row/column communicators, and the 4D convolution layout.
 
-Communication *planning* also lives here: :func:`plan_comm` (1D slab
-decomposition) and :func:`plan_comm_pencil` (2D-mesh pencil decomposition,
-one choice per row/column communicator) pick a backend from the roofline
-model — FFTW-style planning applied to the paper's parcelport choice.
+Communication *planning* also lives here, in both of the paper's modes:
+
+* ESTIMATE — :func:`plan_comm` (1D slab decomposition), :func:`plan_comm_pencil`
+  (2D-mesh pencil decomposition, one choice per row/column communicator),
+  :func:`plan_comm_conv` (sequence-sharded convolution) and
+  :func:`plan_comm_gather` (compressed all-reduce) pick a backend from the
+  roofline model — FFTW-style ESTIMATE planning applied to the paper's
+  parcelport choice.
+* MEASURE — the :func:`measure_comm` family compiles and times every
+  backend (collective / pipelined with a chunk-count sweep / agas) on the
+  LIVE mesh for the actual exchange shape and keeps the fastest, exactly
+  FFTW's MEASURE dynamic programming applied to the §5.3 parcelport swing.
+  Verdicts are recorded in the unified wisdom store
+  (:class:`repro.core.wisdom.WisdomStore`) under ``comm/*`` keys, next to
+  the planner's ``plan/*`` entries, and memoized in-process so a given
+  ``(shape, mesh_shape, kind, axis)`` exchange is timed once — never once
+  per jit trace.  Spell ``comm="measure"`` at any transform entry point.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence, Tuple, Union
+import time
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from . import algo
+from .wisdom import WisdomStore
 
 Complex = algo.Complex
 
@@ -92,6 +109,12 @@ class CommBackend:
         """Redistribute: split ``split`` over the ``p`` participants of
         ``axis_name``, concatenate received blocks along ``concat``."""
         raise NotImplementedError
+
+    def gather(self, c: Complex, axis_name: str) -> Complex:
+        """Stacked all_gather of a pair (leading participant axis added) —
+        the collective :func:`repro.optim.compress.compressed_psum` rides.
+        Both pair members must share their leading dimension."""
+        return all_gather_pair(c, axis_name)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"{type(self).__name__}()"
@@ -148,6 +171,24 @@ class PipelinedBackend(CommBackend):
         return (jnp.concatenate([o[0] for o in outs], axis=split),
                 jnp.concatenate([o[1] for o in outs], axis=split))
 
+    def gather(self, c, axis_name):
+        """Chunked stacked all_gather: the leading (shared) dimension is cut
+        into ``chunks`` pieces, each gathered by its own collective so
+        transfers overlap; received chunks concatenate along axis 1 (the
+        pre-gather leading dim, shifted by the new participant axis)."""
+        n = c[0].shape[0]
+        chunks = max(1, min(self.chunks, n))
+        while n % chunks:
+            chunks -= 1
+        if chunks == 1:
+            return all_gather_pair(c, axis_name)
+        w = n // chunks
+        outs = [all_gather_pair(
+            tuple(jax.lax.dynamic_slice_in_dim(a, k * w, w, 0) for a in c),
+            axis_name) for k in range(chunks)]
+        return (jnp.concatenate([o[0] for o in outs], axis=1),
+                jnp.concatenate([o[1] for o in outs], axis=1))
+
 
 class AgasBackend(CommBackend):
     """AGAS emulation: implicit addressing = replicate-then-slice.
@@ -189,16 +230,21 @@ def get_backend(spec: CommSpec, chunks: int = 4) -> CommBackend:
         return PipelinedBackend(int(arg) if arg else chunks)
     if name == "agas":
         return AgasBackend()
+    if name in ("auto", "measure"):
+        raise ValueError(
+            f"comm={spec!r} is resolved at the transform entry points "
+            "(fft2_slab, fft3_pencil, ...), which know the mesh and shape; "
+            "pass it there, or call plan_comm*/measure_comm* yourself")
     raise ValueError(f"comm backend {spec!r}; options {COMM_BACKENDS}")
 
 
-def resolve_axis_backends(comm, axes: Sequence[str],
-                          chunks: int = 4) -> Tuple[CommBackend, ...]:
-    """Per-mesh-axis backend resolution for multi-axis (pencil) paths.
+def _normalize_axis_specs(comm, axes: Sequence[str]) -> Tuple[CommSpec, ...]:
+    """Expand a per-axis comm argument to one raw spec per mesh axis.
 
     ``comm`` may be a single spec (applied to every axis), a sequence with
     one spec per axis (ordered as ``axes``), or a dict keyed by mesh-axis
-    name (missing axes default to ``"collective"``).
+    name (missing axes default to ``"collective"``).  Specs are NOT resolved
+    to backends here, so ``"auto"``/``"measure"`` survive for the caller.
     """
     if isinstance(comm, dict):
         unknown = set(comm) - set(axes)
@@ -206,21 +252,41 @@ def resolve_axis_backends(comm, axes: Sequence[str],
             raise ValueError(
                 f"per-axis comm has unknown mesh axes {sorted(unknown)}; "
                 f"valid axes: {tuple(axes)}")
-        return tuple(get_backend(comm.get(a, "collective"), chunks)
-                     for a in axes)
+        return tuple(comm.get(a, "collective") for a in axes)
     if isinstance(comm, (list, tuple)):
         if len(comm) != len(axes):
             raise ValueError(
                 f"per-axis comm needs {len(axes)} entries for {axes}, "
                 f"got {len(comm)}")
-        return tuple(get_backend(s, chunks) for s in comm)
-    return tuple(get_backend(comm, chunks) for _ in axes)
+        return tuple(comm)
+    return tuple(comm for _ in axes)
+
+
+def resolve_axis_backends(comm, axes: Sequence[str],
+                          chunks: int = 4) -> Tuple[CommBackend, ...]:
+    """Per-mesh-axis backend resolution for multi-axis (pencil) paths
+    (see :func:`_normalize_axis_specs` for the accepted shapes)."""
+    return tuple(get_backend(s, chunks)
+                 for s in _normalize_axis_specs(comm, axes))
 
 
 # ---------------------------------------------------------------------------
-# communication-aware planning (FFTW-style planning applied to the paper's
-# parcelport choice: pick the comm backend from the roofline model)
+# communication-aware planning, ESTIMATE mode (FFTW-style planning applied
+# to the paper's parcelport choice: pick the comm backend from the roofline)
 # ---------------------------------------------------------------------------
+
+
+def _roofline_choice(wire_bytes: float, flops: float, hw,
+                     overlap_capable: bool = True) -> str:
+    """The shared decision rule: the monolithic collective wins when the
+    exchange is small relative to the compute it could hide behind (it
+    fuses best); pipelining wins when exposed-comm would exceed ~20% of
+    that compute time and overlap hardware exists."""
+    t_comm = wire_bytes / hw.link_bw
+    t_comp = flops / hw.flops
+    if overlap_capable and t_comm > 0.2 * t_comp:
+        return "pipelined"
+    return "collective"
 
 
 def plan_comm(n: int, m: int, p: int, hw=None,
@@ -241,15 +307,11 @@ def plan_comm(n: int, m: int, p: int, hw=None,
     mh_pad = padded_half(m, p)
     slab_bytes = (n / p) * mh_pad * 8.0
     wire = 2.0 * (p - 1) / p * slab_bytes
-    t_comm = wire / hw.link_bw
     # local compute: four-step matmul flops for rows + cols
     flops = 8.0 * (n / p) * mh_pad * (
         sum(algo.default_factorization(m // 2))
         + sum(algo.default_factorization(n)))
-    t_comp = flops / hw.flops
-    if overlap_capable and t_comm > 0.2 * t_comp:
-        return "pipelined"
-    return "collective"
+    return _roofline_choice(wire, flops, hw, overlap_capable)
 
 
 def plan_comm_pencil(shape: Tuple[int, int, int],
@@ -284,12 +346,314 @@ def plan_comm_pencil(shape: Tuple[int, int, int],
         if p <= 1:
             return "collective"
         wire = (p - 1) / p * pencil_bytes
-        t_comm = wire / hw.link_bw
         flops = 8.0 * elems * sum(algo.default_factorization(n_axis))
-        t_comp = flops / hw.flops
-        if overlap_capable and t_comm > 0.2 * t_comp:
-            return "pipelined"
-        return "collective"
+        return _roofline_choice(wire, flops, hw, overlap_capable)
 
     # mesh axis 0's exchange feeds the X-stage; mesh axis 1's the Y-stage
     return choose(p0, nx), choose(p1, ny)
+
+
+def plan_comm_conv(bsz: int, d: int, n1: int, n2: int, p: int, hw=None,
+                   overlap_capable: bool = True) -> str:
+    """Choose the exchange backend for the sequence-sharded FFT convolution
+    (:func:`repro.core.fftconv.fft_conv_seq_sharded`): the length-``n1*n2``
+    signal is viewed as an (n1, n2) matrix sharded over n1, and each of the
+    algorithm's all_to_alls moves the local (bsz, n1/p, n2, d) block while
+    a DFT stage computes."""
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    if p <= 1:
+        return "collective"
+    elems = bsz * (n1 / p) * n2 * d
+    wire = (p - 1) / p * elems * 8.0
+    flops = 8.0 * elems * (sum(algo.default_factorization(n1))
+                           + sum(algo.default_factorization(n2)))
+    return _roofline_choice(wire, flops, hw, overlap_capable)
+
+
+def plan_comm_gather(n_elems: int, p: int, block: int = 256, hw=None,
+                     overlap_capable: bool = True) -> str:
+    """Choose the gather backend for the int8 compressed all-reduce
+    (:func:`repro.optim.compress.compressed_psum`): every participant
+    receives p x the quantized payload (int8 values + bf16 per-block
+    scales) and the dequantize-sum is the only compute to hide behind."""
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    if p <= 1:
+        return "collective"
+    wire = p * (n_elems + (n_elems / block) * 2.0)
+    flops = 2.0 * p * n_elems
+    return _roofline_choice(wire, flops, hw, overlap_capable)
+
+
+# ---------------------------------------------------------------------------
+# communication-aware planning, MEASURE mode (FFTW MEASURE applied to the
+# parcelport choice: time every backend on the live mesh, keep the fastest)
+# ---------------------------------------------------------------------------
+
+DEFAULT_CHUNK_SWEEP = (2, 4, 8)
+
+#: timing probes actually executed (one per candidate backend); tests and
+#: benchmarks snapshot this to prove wisdom/memo hits re-measure nothing.
+MEASURE_STATS = {"timed": 0}
+
+# process-global verdict memo, keyed like the wisdom store.  Transform entry
+# points construct a fresh default Planner per call, so without this memo a
+# jit retrace (or a planner-less second call) would re-run the measurement;
+# with it, each (shape, mesh_shape, kind, axis) exchange is timed exactly
+# once per process no matter how many traces consume the verdict.
+_MEASURE_MEMO: Dict[str, dict] = {}
+
+
+def forget_measurements() -> None:
+    """Drop the in-process comm measurement memo (wisdom files persist)."""
+    _MEASURE_MEMO.clear()
+
+
+def _effective_chunks(chunks: int, w: int) -> int:
+    """The chunk count :class:`PipelinedBackend` will actually use for a
+    destination-block width of ``w``."""
+    c = max(1, min(chunks, w))
+    while w % c:
+        c -= 1
+    return c
+
+
+def _time_callable(fn, args, reps: int) -> float:
+    """Compile + warmup, then wall-time ``reps`` executions (median-free
+    mean, like ``Planner._measure``).  Returns +inf on any failure so a
+    broken candidate loses rather than crashes the sweep."""
+    try:
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+    except Exception:
+        return float("inf")
+    MEASURE_STATS["timed"] += 1
+    return dt
+
+
+def _time_exchange(backend: CommBackend, mesh, axis_name: str,
+                   local_shape: Sequence[int], split: int, concat: int,
+                   p: int, reps: int) -> float:
+    """Time one redistribution with ``backend`` on the live mesh.
+
+    The probe reproduces the transform-local layout exactly: a global
+    (re, im) f32 pair whose ``concat`` dimension is sharded over
+    ``axis_name`` (every device holds ``local_shape``), redistributed to
+    ``split``-sharded — the same collective the transform will emit.
+    """
+    from .compat import shard_map
+    ndim = len(local_shape)
+    global_shape = list(local_shape)
+    global_shape[concat] *= p
+    spec_in = [None] * ndim
+    spec_in[concat] = axis_name
+    spec_out = [None] * ndim
+    spec_out[split] = axis_name
+    pin, pout = PartitionSpec(*spec_in), PartitionSpec(*spec_out)
+    rng = np.random.default_rng(0)
+    probe = tuple(
+        jax.device_put(rng.standard_normal(global_shape).astype(np.float32),
+                       NamedSharding(mesh, pin)) for _ in range(2))
+
+    def local(a, b):
+        return backend.exchange((a, b), axis_name, split=split,
+                                concat=concat, p=p)
+
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(pin, pin),
+                           out_specs=(pout, pout)))
+    return _time_callable(fn, probe, reps)
+
+
+def _time_gather(backend: CommBackend, mesh, axis_name: str, nb: int,
+                 block: int, p: int, reps: int) -> float:
+    """Time one compressed-payload gather (int8 values + bf16 scales) plus
+    the dequantize-sum it must hide behind — the collective
+    :func:`repro.optim.compress.compressed_psum` issues."""
+    from .compat import shard_map
+    rng = np.random.default_rng(0)
+    q = jax.device_put(
+        rng.integers(-127, 128, (p * nb, block)).astype(np.int8),
+        NamedSharding(mesh, PartitionSpec(axis_name, None)))
+    s = jax.device_put(
+        rng.standard_normal((p * nb, 1)).astype(jnp.bfloat16),
+        NamedSharding(mesh, PartitionSpec(axis_name, None)))
+
+    def local(ql, sl):
+        qg, sg = backend.gather((ql, sl), axis_name)
+        return jnp.sum(qg.astype(jnp.float32) * sg.astype(jnp.float32),
+                       axis=0)
+
+    fn = jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(PartitionSpec(axis_name, None),) * 2,
+        out_specs=PartitionSpec(axis_name, None)))
+    return _time_callable(fn, (q, s), reps)
+
+
+def measure_comm(mesh, axis_name: str, local_shape: Sequence[int], *,
+                 split: int, concat: int,
+                 chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                 reps: int = 3) -> Tuple[str, Dict[str, float]]:
+    """FFTW MEASURE for one exchange: compile and time every backend — the
+    monolithic collective, the pipelined exchange at each distinct feasible
+    chunk count, and the agas gather emulation — on the LIVE mesh at the
+    actual local shape, and return ``(fastest_spec, {spec: seconds})``.
+
+    This is the raw, uncached timer; the keyed ``measure_comm_*`` wrappers
+    add wisdom/memo consultation.  A 1-participant communicator returns
+    ``("collective", {})`` without timing anything.
+    """
+    p = mesh.shape[axis_name]
+    if p <= 1:
+        return "collective", {}
+    specs = _candidate_specs(local_shape[split] // p, chunk_candidates,
+                             base=("collective", "agas"))
+    return _run_sweep(specs, lambda spec: _time_exchange(
+        get_backend(spec), mesh, axis_name, tuple(local_shape), split,
+        concat, p, reps))
+
+
+def _candidate_specs(width: int, chunk_candidates: Sequence[int],
+                     base: Sequence[str]) -> Sequence[str]:
+    """The sweep's candidate list: ``base`` plus one pipelined spec per
+    DISTINCT effective chunk count (what :class:`PipelinedBackend` would
+    actually use at this destination-block ``width``)."""
+    specs = list(base)
+    for c in sorted(set(int(c) for c in chunk_candidates)):
+        ce = _effective_chunks(c, width)
+        spec = f"pipelined:{ce}"
+        if ce > 1 and spec not in specs:
+            specs.append(spec)
+    return specs
+
+
+def _run_sweep(specs: Sequence[str], timer) -> Tuple[str, Dict[str, float]]:
+    """Time every candidate and keep the fastest; failed candidates (inf)
+    lose, and an all-failed sweep falls back to the collective."""
+    timings = {spec: timer(spec) for spec in specs}
+    finite = {k: v for k, v in timings.items() if v != float("inf")}
+    if not finite:
+        return "collective", timings
+    return min(finite, key=finite.get), timings
+
+
+def _measured_verdict(key: str, wisdom: Optional[WisdomStore], thunk) -> str:
+    """Measurement cache: consult the wisdom store, then the process memo;
+    run ``thunk`` (the actual timing sweep) only on a double miss, and
+    record the verdict in both."""
+    if wisdom is not None:
+        hit = wisdom.get(key)
+        if hit is not None:
+            _MEASURE_MEMO.setdefault(key, hit)
+            return hit["backend"]
+    rec = _MEASURE_MEMO.get(key)
+    if rec is None:
+        best, timings = thunk()
+        rec = {"backend": best,
+               "seconds": timings.get(best, 0.0),
+               "candidates": {k: (v if v != float("inf") else None)
+                              for k, v in timings.items()}}
+        _MEASURE_MEMO[key] = rec
+    if wisdom is not None and key not in wisdom:
+        wisdom.put(key, rec)
+    return rec["backend"]
+
+
+def measure_comm_slab(n: int, m: int, mesh, axis: str, kind: str = "r2c",
+                      wisdom: Optional[WisdomStore] = None,
+                      chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                      reps: int = 3) -> str:
+    """Measured backend choice for the (n x m) slab FFT's exchanges.
+
+    Times the first redistribution (split padded columns over the ``axis``
+    communicator, concat rows); the return exchange moves the same bytes
+    through the same communicator transposed, so one verdict serves both
+    directions — and the inverse transform.
+    """
+    p = mesh.shape[axis]
+    if p <= 1:
+        return "collective"
+    mh_pad = padded_half(m, p)
+    key = f"comm/slab/{n}x{m}/p{p}/{kind}"
+    return _measured_verdict(key, wisdom, lambda: measure_comm(
+        mesh, axis, (n // p, mh_pad), split=1, concat=0,
+        chunk_candidates=chunk_candidates, reps=reps))
+
+
+def measure_comm_pencil(shape: Tuple[int, int, int], mesh,
+                        axes: Sequence[str], kind: str = "c2c",
+                        wisdom: Optional[WisdomStore] = None,
+                        chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                        reps: int = 3,
+                        which: Tuple[bool, bool] = (True, True)):
+    """Measured per-mesh-axis backend choice for a pencil FFT.
+
+    Each communicator's exchange is measured independently at its true
+    local shape: the Z<->Y exchange inside the row (``axes[1]``)
+    communicator, the Y<->X exchange inside the column (``axes[0]``)
+    communicator.  Returns ``(spec_for_axis0, spec_for_axis1)``, entries
+    ``None`` where ``which`` masks them off (so per-axis ``comm`` arguments
+    can mix ``"measure"`` with explicit specs without paying for both).
+    """
+    nx, ny, nz = shape
+    ax0, ax1 = axes
+    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
+    nz_eff = padded_half(nz, p1) if kind in ("r2c", "c2r") else nz
+    # c2r retraces r2c's exchanges with byte-identical probes, so the
+    # inverse shares the forward's key (and any cached verdict) — same
+    # convention as measure_comm_slab
+    kind_key = "r2c" if kind in ("r2c", "c2r") else kind
+    base = f"comm/pencil/{nx}x{ny}x{nz}/mesh{p0}x{p1}/{kind_key}"
+    s0 = s1 = None
+    if which[1]:
+        s1 = "collective" if p1 <= 1 else _measured_verdict(
+            f"{base}/ax1", wisdom, lambda: measure_comm(
+                mesh, ax1, (nx // p0, ny // p1, nz_eff), split=2, concat=1,
+                chunk_candidates=chunk_candidates, reps=reps))
+    if which[0]:
+        s0 = "collective" if p0 <= 1 else _measured_verdict(
+            f"{base}/ax0", wisdom, lambda: measure_comm(
+                mesh, ax0, (nx // p0, ny, nz_eff // p1), split=1, concat=0,
+                chunk_candidates=chunk_candidates, reps=reps))
+    return s0, s1
+
+
+def measure_comm_conv(bsz: int, d: int, n1: int, n2: int, mesh, axis: str,
+                      wisdom: Optional[WisdomStore] = None,
+                      chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                      reps: int = 3) -> str:
+    """Measured backend choice for the sequence-sharded FFT convolution:
+    times the stage-A exchange of the local (bsz, n1/p, n2, d) block (all
+    four of the algorithm's exchanges move the same bytes)."""
+    p = mesh.shape[axis]
+    if p <= 1:
+        return "collective"
+    key = f"comm/conv/b{bsz}d{d}/{n1}x{n2}/p{p}"
+    return _measured_verdict(key, wisdom, lambda: measure_comm(
+        mesh, axis, (bsz, n1 // p, n2, d), split=2, concat=1,
+        chunk_candidates=chunk_candidates, reps=reps))
+
+
+def measure_comm_gather(mesh, axis_name: str, n_elems: int,
+                        block: int = 256,
+                        wisdom: Optional[WisdomStore] = None,
+                        chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                        reps: int = 3) -> str:
+    """Measured gather choice for the int8 compressed all-reduce over an
+    ``n_elems``-element payload (agas is skipped: its gather IS the
+    monolithic collective)."""
+    p = mesh.shape[axis_name]
+    if p <= 1:
+        return "collective"
+    nb = -(-n_elems // block)
+    key = f"comm/gather/{n_elems}/b{block}/p{p}"
+    return _measured_verdict(key, wisdom, lambda: _run_sweep(
+        _candidate_specs(nb, chunk_candidates, base=("collective",)),
+        lambda spec: _time_gather(get_backend(spec), mesh, axis_name,
+                                  nb, block, p, reps)))

@@ -11,9 +11,11 @@ All redistributions go through the swappable exchange layer in
 module for the cost characteristics and the ``plan_comm`` /
 ``plan_comm_pencil`` roofline planners).  Every entry point takes a ``comm``
 spec: a backend name, a :class:`repro.core.comm.CommBackend` instance,
-``"auto"`` (roofline-planned), or — for the pencil path — a per-mesh-axis
+``"auto"`` (roofline-planned), ``"measure"`` (timed on the live mesh, FFTW
+MEASURE applied to the parcelport choice, verdict cached in the planner's
+unified wisdom store), or — for the pencil path — a per-mesh-axis
 sequence/dict so the row and column communicators can use different
-strategies.
+strategies (``"auto"``/``"measure"`` are valid per-axis entries too).
 
 Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
 
@@ -44,9 +46,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import algo
-from .comm import (COMM_BACKENDS, CommBackend, CommSpec, get_backend,
-                   padded_half, plan_comm, plan_comm_pencil,
-                   resolve_axis_backends)
+from .comm import (COMM_BACKENDS, CommBackend, CommSpec,
+                   _normalize_axis_specs, get_backend, measure_comm_pencil,
+                   measure_comm_slab, padded_half, plan_comm,
+                   plan_comm_pencil, resolve_axis_backends)
 from .compat import shard_map
 from .plan import Plan, Planner, execute, execute_inverse
 
@@ -54,6 +57,7 @@ Complex = algo.Complex
 
 __all__ = [
     "COMM_BACKENDS", "padded_half", "plan_comm", "plan_comm_pencil",
+    "measure_comm_slab", "measure_comm_pencil",
     "fft2_slab", "ifft2_slab",
     "fft3_pencil", "ifft3_pencil", "rfft3_pencil", "irfft3_pencil",
     "distribute", "collect",
@@ -96,7 +100,9 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
     e.g. convolution pipelines that come straight back).
 
     ``comm`` selects the exchange backend (see :mod:`repro.core.comm`);
-    ``"auto"`` plans it from the roofline model of ``planner``'s hardware.
+    ``"auto"`` plans it from the roofline model of ``planner``'s hardware,
+    ``"measure"`` times every backend on the live mesh once and caches the
+    verdict in the planner's wisdom store.
 
     ``permuted_cols`` skips the column FFT's digit transpose (output columns
     arrive in four-step permuted frequency order — valid for pointwise
@@ -108,6 +114,8 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
     p = mesh.shape[axis]
     if comm == "auto":
         comm = plan_comm(n, m, p, hw=planner.hw)
+    elif comm == "measure":
+        comm = measure_comm_slab(n, m, mesh, axis, wisdom=planner.wisdom)
     backend = get_backend(comm, chunks=chunks)
     mh_pad = padded_half(m, p)
     row_plan = planner.plan(m, kind="r2c")
@@ -142,6 +150,10 @@ def ifft2_slab(c: Complex, mesh: jax.sharding.Mesh, axis: str, m: int,
     p = mesh.shape[axis]
     if comm == "auto":
         comm = plan_comm(n, m, p, hw=planner.hw)
+    elif comm == "measure":
+        # the inverse retraces the forward exchanges, so it shares the
+        # forward transform's wisdom key (and any cached verdict)
+        comm = measure_comm_slab(n, m, mesh, axis, wisdom=planner.wisdom)
     backend = get_backend(comm, chunks=chunks)
     mh = m // 2 + 1
     col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
@@ -199,11 +211,28 @@ def collect(x: jax.Array) -> np.ndarray:
 
 
 def _pencil_backends(comm, axes, chunks, planner, shape, mesh, kind):
-    """Resolve the per-axis comm backends for a pencil transform."""
-    if comm == "auto":
+    """Resolve the per-axis comm backends for a pencil transform.
+
+    ``"auto"`` entries (whole-argument or per-axis) are planned from the
+    roofline model; ``"measure"`` entries are timed on the live mesh, one
+    measurement per row/column communicator, with verdicts cached in the
+    planner's wisdom store (and a process-global memo, so retraces are
+    free).  Mixed per-axis arguments only pay for the axes that ask.
+    """
+    specs = list(_normalize_axis_specs(comm, axes))
+    special = [s for s in specs if isinstance(s, str)]
+    if "auto" in special:
         p0, p1 = mesh.shape[axes[0]], mesh.shape[axes[1]]
-        comm = plan_comm_pencil(shape, (p0, p1), hw=planner.hw, kind=kind)
-    return resolve_axis_backends(comm, axes, chunks=chunks)
+        planned = plan_comm_pencil(shape, (p0, p1), hw=planner.hw, kind=kind)
+        specs = [planned[i] if s == "auto" else s
+                 for i, s in enumerate(specs)]
+    if "measure" in special:
+        measured = measure_comm_pencil(
+            shape, mesh, axes, kind=kind, wisdom=planner.wisdom,
+            which=tuple(s == "measure" for s in specs))
+        specs = [measured[i] if s == "measure" else s
+                 for i, s in enumerate(specs)]
+    return resolve_axis_backends(tuple(specs), axes, chunks=chunks)
 
 
 def fft3_pencil(x: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],

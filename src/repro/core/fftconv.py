@@ -36,7 +36,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import algo
-from .comm import CommBackend, get_backend
+from .comm import (CommBackend, CommSpec, get_backend, measure_comm_conv,
+                   plan_comm_conv)
 from .compat import shard_map
 from .plan import Planner
 
@@ -191,16 +192,17 @@ def _dist_ifft_permuted(x: Complex, axis: str, p: int, n1: int, n2: int,
 def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
                          mesh: jax.sharding.Mesh, axis: str,
                          planner: Optional[Planner] = None,
-                         comm: str = "collective",
+                         comm: CommSpec = "collective",
                          chunks: int = 4) -> jax.Array:
     """Causal FFT convolution with the sequence sharded over ``axis``.
 
     u: (B, L, D) with L sharded; k: (D, L_full) replicated filters.
     The paper's distributed algorithm, transposed-order end to end.
-    ``comm`` picks the exchange backend (see :mod:`repro.core.comm`).
+    ``comm`` picks the exchange backend (see :mod:`repro.core.comm`);
+    ``"auto"`` plans it from the roofline model, ``"measure"`` times the
+    backends on the live mesh (verdict cached in the planner's wisdom).
     """
     planner = planner or Planner(backends=("jnp",))
-    backend = get_backend(comm, chunks=chunks)
     b, l, d = u.shape
     p = mesh.shape[axis]
     nf = next_fft_len(2 * l)
@@ -211,6 +213,12 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
         n1 *= 2
     n2 = nf // n1
     assert n2 % p == 0, f"sequence too short for mesh: nf={nf}, p={p}"
+    if comm == "auto":
+        comm = plan_comm_conv(b, d, n1, n2, p, hw=planner.hw)
+    elif comm == "measure":
+        comm = measure_comm_conv(b, d, n1, n2, mesh, axis,
+                                 wisdom=planner.wisdom)
+    backend = get_backend(comm, chunks=chunks)
 
     # global zero-padding to the FFT length (outside shard_map: the tail
     # zeros live on the trailing devices of the sequence axis)

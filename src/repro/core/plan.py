@@ -12,7 +12,11 @@ We reproduce that trade-off natively:
   FFTW's MEASURE dynamic programming over codelets) and keep the fastest.
 * wisdom       — plans are cached by (n, kind, batch-bucket, mode, backend
   restriction) in-process and optionally persisted to a JSON wisdom file,
-  exactly like FFTW wisdom.
+  exactly like FFTW wisdom.  The store (:class:`repro.core.wisdom.WisdomStore`)
+  is shared with the communication autotuner: ``plan/*`` keys live next to
+  the ``comm/*`` verdicts of :func:`repro.core.comm.measure_comm`, and the
+  ``export_wisdom`` / ``import_wisdom`` / ``forget_wisdom`` methods mirror
+  FFTW's API over the whole unified store.
 
 A ``Plan`` is a pure-data recipe; ``execute`` closes over it.  Plans are
 reusable across arrays with the same trailing length (batch size is free),
@@ -23,8 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import json
-import os
 import time
 from typing import Callable, Optional, Sequence, Tuple
 
@@ -33,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import algo
+from .wisdom import WisdomStore, batch_bucket
 
 # ---------------------------------------------------------------------------
 # hardware profiles (roofline constants)
@@ -119,18 +122,29 @@ class Planner:
     def __init__(self, hardware: HardwareSpec = TPU_V5E,
                  mode: str = "estimate", max_base: int = 128,
                  wisdom_path: Optional[str] = None,
-                 backends: Sequence[str] = ("jnp",)):
+                 backends: Sequence[str] = ("jnp",),
+                 wisdom: Optional[WisdomStore] = None):
         assert mode in ("estimate", "measured")
         self.hw = hardware
         self.mode = mode
         self.max_base = max_base
         self.backends = tuple(backends)
-        self.wisdom_path = wisdom_path
-        self._wisdom: dict = {}
+        # a shared store may be passed in (e.g. one file for several
+        # planners + the comm autotuner); otherwise open/create our own.
+        self.wisdom = wisdom if wisdom is not None else WisdomStore(wisdom_path)
+        self.wisdom_path = self.wisdom.path
         self.last_plan_seconds: float = 0.0
-        if wisdom_path and os.path.exists(wisdom_path):
-            with open(wisdom_path) as f:
-                self._wisdom = json.load(f)
+
+    # -- FFTW-style wisdom API (unified plan/* + comm/* store) ---------------
+
+    def export_wisdom(self) -> str:
+        return self.wisdom.export_wisdom()
+
+    def import_wisdom(self, text: str, replace: bool = False) -> int:
+        return self.wisdom.import_wisdom(text, replace=replace)
+
+    def forget_wisdom(self, prefix: str = "") -> int:
+        return self.wisdom.forget_wisdom(prefix)
 
     # -- cost model ---------------------------------------------------------
 
@@ -159,10 +173,11 @@ class Planner:
 
     def plan(self, n: int, kind: str = "c2c", batch: int = 1,
              permuted: bool = False) -> Plan:
-        key = f"{n}/{kind}/{self.mode}/{permuted}/{','.join(self.backends)}"
-        if key in self._wisdom:
+        key = (f"plan/{n}/{kind}/b{batch_bucket(batch)}/{self.mode}/"
+               f"{permuted}/{','.join(self.backends)}")
+        w = self.wisdom.get(key)
+        if w is not None:
             self.last_plan_seconds = 0.0
-            w = self._wisdom[key]
             return Plan(n, kind, tuple(w["factors"]), w["backend"], permuted,
                         w.get("est", 0.0), w.get("measured", -1.0))
         t0 = time.perf_counter()
@@ -176,13 +191,10 @@ class Planner:
         else:
             best = self._measure(cands[: min(len(cands), 12)], n, kind, batch)
         self.last_plan_seconds = time.perf_counter() - t0
-        self._wisdom[key] = {"factors": list(best.factors), "backend": best.backend,
-                             "est": best.est_cost, "measured": best.measured_cost}
-        if self.wisdom_path:
-            tmp = self.wisdom_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(self._wisdom, f, indent=1)
-            os.replace(tmp, self.wisdom_path)
+        self.wisdom.put(key, {"factors": list(best.factors),
+                              "backend": best.backend,
+                              "est": best.est_cost,
+                              "measured": best.measured_cost})
         return best
 
     # -- communication planning (paper §5.3: parcelport choice) ---------------

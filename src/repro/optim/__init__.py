@@ -1,5 +1,7 @@
 from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule, opt_meta
-from .compress import compressed_psum, dequantize_int8, quantize_int8
+from .compress import (choose_psum_comm, compressed_psum, dequantize_int8,
+                       quantize_int8)
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
-           "opt_meta", "quantize_int8", "dequantize_int8", "compressed_psum"]
+           "opt_meta", "quantize_int8", "dequantize_int8", "compressed_psum",
+           "choose_psum_comm"]

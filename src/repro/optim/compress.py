@@ -12,16 +12,25 @@ all_gather the int8 payload + scales over ``axis`` (through the shared
 pair-collective layer in :mod:`repro.core.comm`), dequantize-and-sum
 locally.  For p pods the wire cost is p * (n + n/block * 2) bytes vs
 2 * 4n * (p-1)/p for the f32 ring.
+
+The gather rides the swappable comm subsystem: ``comm="collective"`` is one
+monolithic all_gather, ``comm="pipelined[:c]"`` cuts the payload into
+overlap-ready chunks.  ``compressed_psum`` runs INSIDE shard_map, so the
+``"auto"``/``"measure"`` modes can't resolve there — call
+:func:`choose_psum_comm` outside (it knows the mesh) and pass the verdict
+in, mirroring how the FFT entry points resolve their ``comm`` argument.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import all_gather_pair
+from repro.core.comm import (CommSpec, get_backend, measure_comm_gather,
+                             plan_comm_gather)
 
 BLOCK = 256
 
@@ -47,12 +56,38 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, pad: int,
     return deq.reshape(shape)
 
 
+def choose_psum_comm(mesh, axis_name: str, shape, mode: str = "auto",
+                     wisdom=None, hw=None) -> str:
+    """Resolve a ``comm`` spec for :func:`compressed_psum` OUTSIDE shard_map.
+
+    ``mode="auto"`` applies the gather roofline
+    (:func:`repro.core.comm.plan_comm_gather`) for the ``hw`` profile
+    (default TPU_V5E — pass ``planner.hw`` to match the FFT entry points);
+    ``mode="measure"`` times the monolithic vs chunked gathers on the live
+    mesh for this payload size
+    (:func:`repro.core.comm.measure_comm_gather`), caching the verdict under
+    a ``comm/gather/*`` wisdom key.  Any other mode is passed through
+    verbatim, so callers can thread one config string end to end.
+    """
+    n = math.prod(shape)
+    if mode == "auto":
+        return plan_comm_gather(n, mesh.shape[axis_name], block=BLOCK, hw=hw)
+    if mode == "measure":
+        return measure_comm_gather(mesh, axis_name, n, block=BLOCK,
+                                   wisdom=wisdom)
+    return mode
+
+
 def compressed_psum(x: jax.Array, axis_name: str,
-                    error: jax.Array | None = None
+                    error: jax.Array | None = None,
+                    comm: CommSpec = "collective", chunks: int = 4
                     ) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
 
-    Returns (summed value f32, new error-feedback residual)."""
+    ``comm`` selects the gather backend (resolve ``"auto"``/``"measure"``
+    via :func:`choose_psum_comm` first).  Returns (summed value f32, new
+    error-feedback residual)."""
+    backend = get_backend(comm, chunks=chunks)
     xf = x.astype(jnp.float32)
     if error is not None:
         xf = xf + error
@@ -60,7 +95,7 @@ def compressed_psum(x: jax.Array, axis_name: str,
     local_deq = dequantize_int8(q, scale, pad, xf.shape)
     new_error = xf - local_deq
 
-    qg, sg = all_gather_pair((q, scale), axis_name)             # (P, nb, B) int8,
+    qg, sg = backend.gather((q, scale), axis_name)              # (P, nb, B) int8,
     #                                                             (P, nb, 1) bf16
     deq = qg.astype(jnp.float32) * sg.astype(jnp.float32)
     total = jnp.sum(deq, axis=0).reshape(-1)

@@ -95,3 +95,66 @@ def test_rfft_conjugate_symmetry_consistency(n, seed):
     full = np.asarray(algo.to_complex(algo.fft(
         algo.to_pair(x.astype(np.complex64)))))
     np.testing.assert_allclose(half, full[..., :n // 2 + 1], atol=1e-3 * n)
+
+
+# ---------------------------------------------------------------------------
+# planning invariants: plans round-trip for every kind x backend, and wisdom
+# survives serialization byte-identically
+# ---------------------------------------------------------------------------
+
+from repro.core import plan as plan_mod  # noqa: E402
+
+PLAN_BACKENDS = st.sampled_from(plan_mod.BACKENDS)
+PLAN_SIZES = st.sampled_from([16, 64, 256])
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(n=PLAN_SIZES, backend=PLAN_BACKENDS, seed=st.integers(0, 2 ** 20),
+       b=st.integers(1, 3))
+def test_plan_execute_roundtrip_c2c(n, backend, seed, b):
+    """execute -> execute_inverse is the identity for every backend a Plan
+    can hold (permuted pallas plans invert through ifft_from_permuted)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((b, n))
+         + 1j * rng.standard_normal((b, n))).astype(np.complex64)
+    p = plan_mod.Planner(mode="estimate", backends=(backend,))
+    pl = p.plan(n, "c2c", batch=b)
+    back = plan_mod.execute_inverse(pl, plan_mod.execute(pl, algo.to_pair(x)))
+    z = np.asarray(back[0]) + 1j * np.asarray(back[1])
+    np.testing.assert_allclose(z, x, atol=2e-3 * max(np.abs(x).max(), 1))
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(n=PLAN_SIZES, backend=PLAN_BACKENDS, seed=st.integers(0, 2 ** 20))
+def test_plan_execute_roundtrip_r2c_c2r(n, backend, seed):
+    """The r2c/c2r plan pair round-trips real signals for every backend."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, n)).astype(np.float32)
+    p = plan_mod.Planner(mode="estimate", backends=(backend,))
+    back = plan_mod.execute(p.plan(n, "c2r"),
+                            plan_mod.execute(p.plan(n, "r2c"), x))
+    np.testing.assert_allclose(np.asarray(back), x,
+                               atol=2e-3 * max(np.abs(x).max(), 1))
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(ns=st.lists(PLAN_SIZES, min_size=1, max_size=3, unique=True),
+       kind=st.sampled_from(["c2c", "r2c"]), b=st.integers(1, 64))
+def test_measured_wisdom_export_import_byte_identical(ns, kind, b):
+    """Measured wisdom survives an export -> import cycle byte-identically,
+    whatever mix of sizes/kinds/batch buckets was planned."""
+    p = plan_mod.Planner(mode="measured", backends=("jnp", "xla_native"),
+                         hardware=plan_mod.CPU_LOCAL)
+    for n in ns:
+        p.plan(n, kind, batch=b)
+    text = p.export_wisdom()
+    q = plan_mod.Planner(mode="measured", backends=("jnp", "xla_native"),
+                         hardware=plan_mod.CPU_LOCAL)
+    assert q.import_wisdom(text) == len(ns)
+    assert q.export_wisdom() == text
+    for n in ns:                      # imported wisdom fully serves plans
+        q.plan(n, kind, batch=b)
+        assert q.last_plan_seconds == 0.0
