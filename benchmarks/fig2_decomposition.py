@@ -1,12 +1,17 @@
 """Paper Fig. 2: runtime decomposition per algorithmic step
-(fft1 / transpose / fft2 / transpose-back) for the synchronized variants."""
+(fft1 / transpose / fft2 / transpose-back) for the synchronized variants —
+plus the *decomposition planner's* verdicts: for each problem size, what
+`repro.core.api.plan_nd` scores for local vs slab vs pencil on reference
+meshes, and which it picks on "auto".  The scores come from the roofline
+model (abstract meshes — no devices needed), so the column shows the
+planner's reasoning next to the measured per-stage numbers."""
 
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import plan, variants
+from repro.core import api, plan, variants
 
 from .common import emit, time_fn
 
@@ -30,6 +35,30 @@ def run(n: int = 512) -> None:
     t_fused = time_fn(fused, x)
     emit(f"fig2/fused_for_loop/n{n}", t_fused,
          f"stage_sum_over_fused={total / t_fused:.2f}")
+
+    # ------------------------------------------------------------------
+    # decomposition planner column: local vs slab vs pencil vs auto, per
+    # shape, on the reference 8-way and 4x2 meshes (roofline scores)
+    # ------------------------------------------------------------------
+    for shape, kind, mesh in (
+            ((64, 64), "r2c", {"fft": 8}),
+            ((n, n), "r2c", {"fft": 8}),
+            ((4 * n, 4 * n), "r2c", {"fft": 8}),
+            ((64, 64, 64), "c2c", {"mx": 4, "my": 2}),
+            ((128, 128, 128), "c2c", {"mx": 4, "my": 2})):
+        tag = "x".join(str(s) for s in shape)
+        scores = {}
+        for decomp in api.DECOMPS:
+            if decomp == "pencil" and len(shape) != 3:
+                continue
+            nd = planner.plan_nd(shape, kind, mesh=mesh, decomp=decomp)
+            scores[decomp] = nd.est_cost
+            emit(f"fig2/decomp/{decomp}/{tag}", nd.est_cost,
+                 f"mesh_axes={nd.mesh_axes}")
+        auto = planner.plan_nd(shape, kind, mesh=mesh)
+        emit(f"fig2/decomp/auto/{tag}", auto.est_cost,
+             f"picked={auto.decomp};"
+             + ";".join(f"{k}={v:.2e}" for k, v in scores.items()))
 
 
 if __name__ == "__main__":

@@ -7,16 +7,16 @@ parsed from the compiled HLO (the roofline-relevant number: AGAS moves ~P x
 the bytes; pipelined moves the same bytes as collective but in overlap-ready
 chunks).
 
-Covers both decompositions x every comm backend: the 1D slab layout (8-way
+Everything goes through the planned front-end (`repro.core.api.plan_nd` +
+the `fftn` family) with forced decompositions: the 1D slab layout (8-way
 mesh, 2D r2c) and the 2D pencil layout (4x2 mesh, 3D c2c with row/column
 communicators), plus mixed per-axis backend selection on the pencil path.
 
-A final section reproduces the paper's plan-mode trade-off at the
-communication layer: for each workload it reports the backend the roofline
-ESTIMATE picks vs the backend on-mesh MEASURE picks (comm="measure"),
-the one-off measurement cost, and the wall time of the measured choice —
-plus proof that the second measured call is a pure wisdom hit (zero timing
-probes).
+A final section reproduces the paper's plan-mode trade-off at BOTH planning
+layers: the comm layer (roofline ESTIMATE choice vs on-mesh MEASURE choice
+per exchange, with proof that the second measured call is a pure wisdom
+hit) and the new decomposition layer (`mode="estimate"` vs
+`mode="measured"` in `plan_nd`, with the one-off finalist-timing cost).
 
 The multi-device part runs in a subprocess (device-count override is
 process-local).
@@ -51,8 +51,9 @@ def _worker() -> None:
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.core import api
     from repro.core import comm as comm_mod
-    from repro.core import dfft, plan
+    from repro.core import plan
     from repro.launch.dryrun import parse_collectives
 
     from benchmarks.common import emit, time_fn
@@ -65,8 +66,10 @@ def _worker() -> None:
         xs = jax.device_put(x, NamedSharding(mesh, P("fft", None)))
         base = None
         for comm in ("collective", "pipelined", "agas"):
-            fn = jax.jit(lambda a, _c=comm: dfft.fft2_slab(
-                a, mesh, "fft", planner, comm=_c))
+            nd = api.plan_nd((n, n), "r2c", mesh=mesh, comm=comm,
+                             planner=planner, decomp="slab", axes=("fft",))
+            fn = jax.jit(lambda a, _p=nd: api.execute_nd(
+                _p, a, mesh=mesh, planner=planner))
             t = time_fn(fn, xs)
             lowered = fn.lower(xs)
             _, counts, wire = parse_collectives(
@@ -79,8 +82,10 @@ def _worker() -> None:
                  f"n_collectives={sum(counts.values())}")
         # beyond-paper: transposed-spectrum output (skip exchange #2) —
         # the §Perf-A winning configuration, wall-clock ground truth
-        fn_kt = jax.jit(lambda a: dfft.fft2_slab(a, mesh, "fft", planner,
-                                                 keep_transposed=True))
+        nd = api.plan_nd((n, n), "r2c", mesh=mesh, comm="collective",
+                         planner=planner, decomp="slab", axes=("fft",))
+        fn_kt = jax.jit(lambda a, _p=nd: api.execute_nd(
+            _p, a, mesh=mesh, planner=planner, keep_transposed=True))
         t_kt = time_fn(fn_kt, xs)
         _, counts, wire = parse_collectives(
             fn_kt.lower(xs).compile().as_text(), with_wire=True)
@@ -105,8 +110,11 @@ def _worker() -> None:
     for comms in pencil_comms:
         tag = "+".join(sorted(set(comms))) if len(set(comms)) > 1 \
             else comms[0]
-        fn = jax.jit(lambda a, b, _c=comms: dfft.fft3_pencil(
-            (a, b), mesh2, ("mx", "my"), planner, comm=_c))
+        ndp = api.plan_nd((nx, ny, nz), "c2c", mesh=mesh2, comm=comms,
+                          planner=planner, decomp="pencil",
+                          axes=("mx", "my"))
+        fn = jax.jit(lambda a, b, _p=ndp: api.execute_nd(
+            _p, (a, b), mesh=mesh2, planner=planner))
         t = time_fn(fn, *pair)
         _, counts, wire = parse_collectives(
             fn.lower(*pair).compile().as_text(), with_wire=True)
@@ -120,8 +128,10 @@ def _worker() -> None:
     xr = jax.device_put(
         rng.standard_normal((nx, ny, nz)).astype(np.float32),
         NamedSharding(mesh2, P("mx", "my", None)))
-    fn = jax.jit(lambda a: dfft.rfft3_pencil(a, mesh2, ("mx", "my"),
-                                             planner, comm="auto"))
+    ndr = api.plan_nd((nx, ny, nz), "r2c", mesh=mesh2, comm="auto",
+                      planner=planner, decomp="pencil", axes=("mx", "my"))
+    fn = jax.jit(lambda a, _p=ndr: api.execute_nd(
+        _p, a, mesh=mesh2, planner=planner))
     t = time_fn(fn, xr)
     _, counts, wire = parse_collectives(
         fn.lower(xr).compile().as_text(), with_wire=True)
@@ -142,10 +152,15 @@ def _worker() -> None:
         meas_choice = comm_mod.measure_comm_slab(n, n, mesh, "fft",
                                                  wisdom=planner.wisdom)
         plan_cost = time.perf_counter() - t0
-        t_meas = time_fn(jax.jit(lambda a, _c=meas_choice: dfft.fft2_slab(
-            a, mesh, "fft", planner, comm=_c)), xs)
-        t_est = time_fn(jax.jit(lambda a, _c=est_choice: dfft.fft2_slab(
-            a, mesh, "fft", planner, comm=_c)), xs)
+
+        def timed_slab(choice):
+            nd = api.plan_nd((n, n), "r2c", mesh=mesh, comm=choice,
+                             planner=planner, decomp="slab", axes=("fft",))
+            return time_fn(jax.jit(lambda a, _p=nd: api.execute_nd(
+                _p, a, mesh=mesh, planner=planner)), xs)
+
+        t_meas = timed_slab(meas_choice)
+        t_est = timed_slab(est_choice)
         # second measured call: pure wisdom hit, zero timing probes
         probes = comm_mod.MEASURE_STATS["timed"]
         comm_mod.measure_comm_slab(n, n, mesh, "fft", wisdom=planner.wisdom)
@@ -160,11 +175,30 @@ def _worker() -> None:
     m0, m1 = comm_mod.measure_comm_pencil((nx, ny, nz), mesh2, ("mx", "my"),
                                           wisdom=planner.wisdom)
     plan_cost = time.perf_counter() - t0
-    t_meas = time_fn(jax.jit(lambda a, b, _c=(m0, m1): dfft.fft3_pencil(
-        (a, b), mesh2, ("mx", "my"), planner, comm=_c)), *pair)
+    ndm = api.plan_nd((nx, ny, nz), "c2c", mesh=mesh2, comm=(m0, m1),
+                      planner=planner, decomp="pencil", axes=("mx", "my"))
+    t_meas = time_fn(jax.jit(lambda a, b, _p=ndm: api.execute_nd(
+        _p, (a, b), mesh=mesh2, planner=planner)), *pair)
     emit(f"fig6/choice_pencil/x{nx}y{ny}z{nz}", t_meas,
          f"estimate={est0}+{est1};measured={m0}+{m1};"
          f"measure_cost_s={plan_cost:.2f}")
+
+    # ------------------------------------------------------------------
+    # the same trade-off one layer up: decomposition choice by roofline
+    # ESTIMATE vs on-mesh MEASURED finalist timing (plan_nd's two modes)
+    # ------------------------------------------------------------------
+    for shape, kind, m, axes in (((64, 512), "r2c", mesh, ("fft",)),
+                                 ((nx, ny, nz), "c2c", mesh2, ("mx", "my"))):
+        est_nd = api.plan_nd(shape, kind, mesh=m, axes=axes, planner=planner)
+        t0 = time.perf_counter()
+        meas_nd = api.plan_nd(shape, kind, mesh=m, axes=axes,
+                              planner=planner, mode="measured")
+        plan_cost = time.perf_counter() - t0
+        tag = "x".join(str(s) for s in shape)
+        emit(f"fig6/choice_decomp/{tag}", meas_nd.measured_cost,
+             f"estimate={est_nd.decomp};measured={meas_nd.decomp};"
+             f"est_cost={est_nd.est_cost:.2e};"
+             f"measure_cost_s={plan_cost:.2f}")
 
 
 if __name__ == "__main__":

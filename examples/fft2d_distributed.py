@@ -1,6 +1,8 @@
-"""Distributed 2D FFT (the paper's §5.3 experiment) on 8 emulated devices:
-slab decomposition, explicit collectives, the comm backends, and the two
-backend-selection modes (roofline "auto" vs on-mesh-timed "measure").
+"""Distributed N-D FFT through the planned front-end (the paper's §5.3
+experiment) on 8 emulated devices: `plan_nd` scores local vs slab vs pencil
+decompositions (with mesh-axis assignment), resolves the exchange backends
+(roofline "auto" or on-mesh-timed "measure"), and the `fftn` family executes
+the plan — numpy-exact shapes, mixed-radix meshes and batch dims included.
 
     PYTHONPATH=src python examples/fft2d_distributed.py
     PYTHONPATH=src python examples/fft2d_distributed.py --comm measure \
@@ -15,10 +17,9 @@ import time                                   # noqa: E402
 
 import jax                                    # noqa: E402
 import numpy as np                            # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core import (Planner, fft2_slab, fft3_pencil, ifft2_slab,  # noqa: E402
-                        ifft3_pencil, irfft3_pencil, rfft3_pencil)
+from repro.core import (Planner, fftn, ifftn, irfftn, plan_nd,  # noqa: E402
+                        rfftn)
 
 COMM_CHOICES = ("collective", "pipelined", "agas", "auto", "measure")
 
@@ -29,77 +30,96 @@ def main() -> None:
                     help="run a single exchange backend / selection mode "
                          "(default: sweep them all)")
     ap.add_argument("--wisdom", default=None,
-                    help="wisdom JSON path shared by plan + comm autotuners "
-                         "(comm=measure verdicts persist across runs)")
+                    help="wisdom JSON path shared by plan + comm + dfft "
+                         "autotuners (measure verdicts persist across runs)")
     args = ap.parse_args()
     sweep = COMM_CHOICES if args.comm is None else (args.comm,)
 
     mesh = jax.make_mesh((8,), ("fft",))
+    mesh2 = jax.make_mesh((4, 2), ("mx", "my"))
     planner = Planner(mode="estimate", backends=("jnp",),
                       wisdom_path=args.wisdom)
     rng = np.random.default_rng(0)
 
+    # ------------------------------------------------------------------
+    # the decomposition planner at work: one front-end, every layout
+    # ------------------------------------------------------------------
+    for shape, kind, m in (((64, 64), "r2c", mesh),
+                           ((512, 512), "r2c", mesh),
+                           ((32, 64, 128), "c2c", mesh2),
+                           ((10, 36), "r2c", mesh)):     # mixed radix
+        nd = plan_nd(shape, kind, mesh=m, planner=planner)
+        print(f"plan_nd{shape} {kind}: decomp={nd.decomp:7s} "
+              f"axes={nd.mesh_axes} comm={nd.comm} "
+              f"est={nd.est_cost * 1e6:8.1f}us")
+
+    # 2D r2c through the front-end, per comm spec
     n, m = 512, 512
     x = rng.standard_normal((n, m)).astype(np.float32)
-    xs = jax.device_put(x, NamedSharding(mesh, P("fft", None)))
     ref = np.fft.rfft2(x)
-
     for comm in sweep:
-        fn = jax.jit(lambda a, _c=comm: fft2_slab(a, mesh, "fft", planner,
-                                                  comm=_c))
-        out = jax.block_until_ready(fn(xs))
+        nd = plan_nd((n, m), "r2c", mesh=mesh, comm=comm, planner=planner,
+                     decomp="slab", axes=("fft",))
+        fn = jax.jit(lambda a, _p=nd: rfftn(a, mesh=mesh, plan=_p,
+                                            planner=planner))
+        out = jax.block_until_ready(fn(x))
         t0 = time.perf_counter()
-        out = jax.block_until_ready(fn(xs))
+        out = jax.block_until_ready(fn(x))
         dt = time.perf_counter() - t0
-        z = np.asarray(out[0])[:, :m // 2 + 1] + 1j * np.asarray(out[1])[:, :m // 2 + 1]
+        z = np.asarray(out[0]) + 1j * np.asarray(out[1])
         err = np.max(np.abs(z - ref)) / np.max(np.abs(ref))
-        print(f"fft2_slab comm={comm:10s} t={dt * 1e3:7.1f}ms rel_err={err:.2e}")
+        print(f"rfftn slab comm={comm:10s} t={dt * 1e3:7.1f}ms "
+              f"rel_err={err:.2e}")
 
-    # roundtrip through the inverse
-    c = fft2_slab(xs, mesh, "fft", planner)
-    back = ifft2_slab(c, mesh, "fft", m, planner)
-    print("ifft2 roundtrip err:", float(np.max(np.abs(np.asarray(back) - x))))
+    # roundtrip through the inverse (the same plan serves both directions)
+    nd = plan_nd((n, m), "r2c", mesh=mesh, planner=planner)
+    back = irfftn(rfftn(x, mesh=mesh, plan=nd, planner=planner),
+                  shape=(n, m), mesh=mesh, plan=nd, planner=planner)
+    print("irfftn roundtrip err:", float(np.max(np.abs(np.asarray(back) - x))))
 
-    # 3D pencil decomposition (P3DFFT-style) on a 4x2 mesh, per comm backend
-    mesh2 = jax.make_mesh((4, 2), ("mx", "my"))
+    # 3D pencil decomposition (P3DFFT-style) on the 4x2 mesh, per comm spec
     xc = (rng.standard_normal((32, 64, 128)).astype(np.float32)
           + 1j * rng.standard_normal((32, 64, 128)).astype(np.float32))
-    pair = (jax.device_put(np.real(xc).astype(np.float32),
-                           NamedSharding(mesh2, P("mx", "my", None))),
-            jax.device_put(np.imag(xc).astype(np.float32),
-                           NamedSharding(mesh2, P("mx", "my", None))))
     ref3 = np.fft.fftn(xc)
     for comm in sweep:
-        rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner, comm=comm)
+        nd3 = plan_nd((32, 64, 128), "c2c", mesh=mesh2, comm=comm,
+                      planner=planner, decomp="pencil", axes=("mx", "my"))
+        rr, ri = fftn(xc, mesh=mesh2, plan=nd3, planner=planner)
         err3 = np.max(np.abs((np.asarray(rr) + 1j * np.asarray(ri)) - ref3)) \
             / np.max(np.abs(ref3))
-        print(f"fft3_pencil comm={comm:10s} (4x2 mesh) rel_err={err3:.2e}")
+        print(f"fftn pencil comm={comm:10s} (4x2 mesh) rel_err={err3:.2e}")
     if args.wisdom:
         from repro.core import comm as comm_mod
-        verdicts = {k: planner.wisdom.get(k)["backend"]
+        verdicts = {k: planner.wisdom.get(k).get("backend",
+                                                 planner.wisdom.get(k))
                     for k in planner.wisdom.keys("comm/")}
         print(f"comm wisdom at {args.wisdom}: {verdicts} "
               f"(timing probes this run: {comm_mod.MEASURE_STATS['timed']})")
+        print("dfft wisdom:", list(planner.wisdom.keys("dfft/")))
 
-    # mixed per-axis selection: pipeline the row-communicator exchange only
-    rr, ri = fft3_pencil(pair, mesh2, ("mx", "my"), planner,
-                         comm=("collective", "pipelined"))
-    br, bi = ifft3_pencil((rr, ri), mesh2, ("mx", "my"), planner,
-                          comm=("collective", "pipelined"))
+    # mixed per-axis selection + full c2c roundtrip
+    ndp = plan_nd((32, 64, 128), "c2c", mesh=mesh2,
+                  comm=("collective", "pipelined"), planner=planner,
+                  decomp="pencil", axes=("mx", "my"))
+    br, bi = ifftn(fftn(xc, mesh=mesh2, plan=ndp, planner=planner),
+                   mesh=mesh2, plan=ndp, planner=planner)
     back3 = np.asarray(br) + 1j * np.asarray(bi)
-    print("ifft3 roundtrip err:", float(np.max(np.abs(back3 - xc))))
+    print("ifftn roundtrip err:", float(np.max(np.abs(back3 - xc))))
 
-    # 3D r2c/c2r pencil roundtrip (padded half spectrum, as the 2D path)
-    xr3 = rng.standard_normal((32, 64, 128)).astype(np.float32)
-    xr3s = jax.device_put(xr3, NamedSharding(mesh2, P("mx", "my", None)))
-    re3, im3 = rfft3_pencil(xr3s, mesh2, ("mx", "my"), planner, comm="auto")
-    z3 = (np.asarray(re3)[..., :128 // 2 + 1]
-          + 1j * np.asarray(im3)[..., :128 // 2 + 1])
-    err_r = np.max(np.abs(z3 - np.fft.rfftn(xr3))) \
-        / np.max(np.abs(np.fft.rfftn(xr3)))
-    back_r = irfft3_pencil((re3, im3), mesh2, ("mx", "my"), 128, planner,
-                           comm="auto")
-    print(f"rfft3_pencil rel_err={err_r:.2e}  irfft3 roundtrip err:",
+    # 3D r2c/c2r roundtrip with a leading batch dim and a mixed-radix mesh
+    # (neither X=6 nor Y=10 divides the 4x2 communicators; the padded bands
+    # are planned, carried, and cropped by the NdPlan recipe)
+    xr3 = rng.standard_normal((2, 6, 10, 128)).astype(np.float32)
+    ndr = plan_nd((6, 10, 128), "r2c", mesh=mesh2, planner=planner,
+                  decomp="pencil", axes=("mx", "my"))
+    re3, im3 = rfftn(xr3, mesh=mesh2, plan=ndr, planner=planner, ndim=3)
+    z3 = np.asarray(re3) + 1j * np.asarray(im3)
+    ref_r = np.fft.rfftn(xr3, axes=(-3, -2, -1))
+    err_r = np.max(np.abs(z3 - ref_r)) / np.max(np.abs(ref_r))
+    back_r = irfftn((re3, im3), shape=(6, 10, 128), mesh=mesh2, plan=ndr,
+                    planner=planner)
+    print(f"rfftn pencil(batch,mixed-radix) rel_err={err_r:.2e}  "
+          "irfftn roundtrip err:",
           float(np.max(np.abs(np.asarray(back_r) - xr3))))
 
 

@@ -17,3 +17,11 @@ fi
 # full tier-1: the fast tests rerun from cache-warm bytecode in seconds;
 # the real added cost is the multi-device distributed matrix.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
+
+# end-to-end smoke of the planned N-D front-end on an 8-way CPU mesh:
+# plan_nd decomposition choice, auto comm resolution, slab + pencil
+# execution, mixed-radix + batched paths — the example exercises the whole
+# stack, not just units.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python examples/fft2d_distributed.py --comm auto

@@ -67,10 +67,14 @@ Complex = algo.Complex
 COMM_BACKENDS = ("collective", "pipelined", "agas")
 
 
+def pad_to(n: int, p: int) -> int:
+    """``n`` rounded up to a multiple of ``p`` (collective divisibility)."""
+    return -(-n // p) * p
+
+
 def padded_half(m: int, p: int) -> int:
     """Column count after r2c (m//2+1) padded up to a multiple of p."""
-    mh = m // 2 + 1
-    return ((mh + p - 1) // p) * p
+    return pad_to(m // 2 + 1, p)
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +316,35 @@ def plan_comm(n: int, m: int, p: int, hw=None,
         sum(algo.default_factorization(m // 2))
         + sum(algo.default_factorization(n)))
     return _roofline_choice(wire, flops, hw, overlap_capable)
+
+
+def plan_comm_slab_nd(shape: Sequence[int], p: int, hw=None,
+                      kind: str = "c2c",
+                      overlap_capable: bool = True) -> str:
+    """:func:`plan_comm` generalized to an N-D slab decomposition: the first
+    transform axis is sharded over ``p`` devices, the last axis (its r2c half
+    spectrum, for real kinds) is split in the exchange, every other axis is
+    local.  The 2D r2c case coincides with :func:`plan_comm`."""
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    if p <= 1:
+        return "collective"
+    last = padded_half(shape[-1], p) if kind in ("r2c", "c2r") \
+        else pad_to(shape[-1], p)
+    elems = float(np.prod([pad_to(shape[0], p), *shape[1:-1]])) * last
+    wire = 2.0 * (p - 1) / p * (elems / p) * 8.0
+    flops = 8.0 * (elems / p) * sum(fac_sum(n) for n in shape)
+    return _roofline_choice(wire, flops, hw, overlap_capable)
+
+
+def fac_sum(n: int) -> float:
+    """Four-step MAC count per element for a length-``n`` stage, falling
+    back to the direct DFT for lengths the factorizer cannot split (the
+    shared cost kernel of the slab and N-D decomposition rooflines)."""
+    try:
+        return float(sum(algo.default_factorization(n)))
+    except ValueError:
+        return float(n)
 
 
 def plan_comm_pencil(shape: Tuple[int, int, int],
@@ -576,13 +609,28 @@ def measure_comm_slab(n: int, m: int, mesh, axis: str, kind: str = "r2c",
     through the same communicator transposed, so one verdict serves both
     directions — and the inverse transform.
     """
+    return measure_comm_slab_nd((n, m), mesh, axis, kind=kind, wisdom=wisdom,
+                                chunk_candidates=chunk_candidates, reps=reps)
+
+
+def measure_comm_slab_nd(shape: Sequence[int], mesh, axis: str,
+                         kind: str = "r2c",
+                         wisdom: Optional[WisdomStore] = None,
+                         chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
+                         reps: int = 3) -> str:
+    """:func:`measure_comm_slab` generalized to an N-D slab decomposition
+    (first axis sharded, last axis split in the exchange, middles local).
+    The 2D case shares its wisdom key with :func:`measure_comm_slab`."""
     p = mesh.shape[axis]
     if p <= 1:
         return "collective"
-    mh_pad = padded_half(m, p)
-    key = f"comm/slab/{n}x{m}/p{p}/{kind}"
+    last = padded_half(shape[-1], p) if kind in ("r2c", "c2r") \
+        else pad_to(shape[-1], p)
+    kind_key = "r2c" if kind in ("r2c", "c2r") else kind
+    key = f"comm/slab/{'x'.join(str(s) for s in shape)}/p{p}/{kind_key}"
+    local_shape = (pad_to(shape[0], p) // p, *shape[1:-1], last)
     return _measured_verdict(key, wisdom, lambda: measure_comm(
-        mesh, axis, (n // p, mh_pad), split=1, concat=0,
+        mesh, axis, local_shape, split=len(local_shape) - 1, concat=0,
         chunk_candidates=chunk_candidates, reps=reps))
 
 

@@ -18,7 +18,7 @@ from typing import Optional, Set
 
 import jax
 
-__all__ = ["shard_map", "pvary", "ring_shift", "scan_carry",
+__all__ = ["shard_map", "batched_spec", "pvary", "ring_shift", "scan_carry",
            "partial_manual_region", "legacy_partial_manual"]
 
 _TLS = threading.local()
@@ -73,6 +73,21 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
         auto = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check_vma, auto=auto)
+
+
+def batched_spec(spec, batch_ndim: int):
+    """Prepend ``batch_ndim`` replicated (None) dims to a PartitionSpec.
+
+    The one batching convention for every shard_map'd transform: leading
+    batch axes are never sharded by the FFT layer, so a spec written for the
+    unbatched layout extends to any batch rank.  Shared by the slab/pencil
+    executors in :mod:`repro.core.dfft` and the sequence-sharded convolution
+    in :mod:`repro.core.fftconv`.
+    """
+    from jax.sharding import PartitionSpec
+    if batch_ndim <= 0:
+        return spec
+    return PartitionSpec(*((None,) * batch_ndim + tuple(spec)))
 
 
 def pvary(x, axis_names):

@@ -6,16 +6,25 @@ central design decision ("relying on the implicit communication HPX allows
 with AGAS does not make sense; instead we use the HPX equivalents of the MPI
 collective operations").
 
-All redistributions go through the swappable exchange layer in
-:mod:`repro.core.comm` (``collective`` / ``pipelined`` / ``agas`` — see that
-module for the cost characteristics and the ``plan_comm`` /
-``plan_comm_pencil`` roofline planners).  Every entry point takes a ``comm``
-spec: a backend name, a :class:`repro.core.comm.CommBackend` instance,
-``"auto"`` (roofline-planned), ``"measure"`` (timed on the live mesh, FFTW
-MEASURE applied to the parcelport choice, verdict cached in the planner's
-unified wisdom store), or — for the pencil path — a per-mesh-axis
-sequence/dict so the row and column communicators can use different
-strategies (``"auto"``/``"measure"`` are valid per-axis entries too).
+This module holds the *executors*: given an :class:`repro.core.api.NdPlan`
+(the pure-data recipe produced by :func:`repro.core.api.plan_nd`), the
+``execute_slab`` / ``execute_pencil`` pairs run the decomposed transform on
+a live mesh.  The planning — which decomposition, which mesh-axis
+assignment, which exchange backend — lives in :mod:`repro.core.api`; the
+exchange strategies themselves live in :mod:`repro.core.comm`.
+
+One shared pad-and-crop layer serves every path:
+
+* r2c half spectra are zero-padded to the collective-divisible width
+  (``padded_half``), the convention the 2D slab path always had;
+* **mixed-radix mesh shapes** — transform axes not divisible by their
+  communicator — are handled by zero-padding the axis up to the next
+  multiple, cropping to the true length just before the axis is transformed,
+  and re-padding after, so the padded band stays exactly zero through every
+  exchange and is cropped once at the end (``NdPlan.crop``);
+* **leading batch dims** ride through every executor via the batched
+  shard_map spec helper (:func:`repro.core.compat.batched_spec`) shared
+  with :func:`repro.core.fftconv.fft_conv_seq_sharded`.
 
 Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
 
@@ -26,19 +35,18 @@ Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
   4. local c2c FFTs along (now contiguous) columns
   5. COMMUNICATE back + rearrange to original layout (N/P, Mh)
 
-The transform matches ``numpy.fft.rfft2`` zero-padded to the padded column
-count; ``Mh`` is padded to a multiple of P for collective divisibility and
-cropped by the caller-facing wrappers.
+Pencil decomposition (P3DFFT-style, 2D mesh) has full parity with slab.
 
-Pencil decomposition (P3DFFT-style, 2D mesh) has full parity with slab:
-forward/inverse c2c (:func:`fft3_pencil` / :func:`ifft3_pencil`) and r2c/c2r
-(:func:`rfft3_pencil` / :func:`irfft3_pencil`) with the same padded-half
-cropping convention as the 2D path.
+The historical shape-specific entry points — ``fft2_slab``/``ifft2_slab``
+and the four ``*_pencil`` functions — remain as thin DEPRECATED shims that
+build an ``NdPlan`` internally and call the shared executors; new code
+should go through :func:`repro.core.api.plan_nd` and the ``fftn`` family.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import warnings
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,18 +54,21 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from . import algo
-from .comm import (COMM_BACKENDS, CommBackend, CommSpec,
-                   _normalize_axis_specs, get_backend, measure_comm_pencil,
-                   measure_comm_slab, padded_half, plan_comm,
-                   plan_comm_pencil, resolve_axis_backends)
-from .compat import shard_map
+from .comm import (COMM_BACKENDS, CommBackend, CommSpec, get_backend,
+                   measure_comm_pencil, measure_comm_slab, pad_to,
+                   padded_half, plan_comm, plan_comm_pencil,
+                   resolve_axis_backends)
+from .compat import batched_spec, shard_map
 from .plan import Plan, Planner, execute, execute_inverse
 
 Complex = algo.Complex
 
 __all__ = [
-    "COMM_BACKENDS", "padded_half", "plan_comm", "plan_comm_pencil",
+    "COMM_BACKENDS", "padded_half", "pad_to", "plan_comm", "plan_comm_pencil",
     "measure_comm_slab", "measure_comm_pencil",
+    "rows_rfft", "rows_irfft", "hermitian_extend_last",
+    "execute_slab", "execute_slab_inverse",
+    "execute_pencil", "execute_pencil_inverse",
     "fft2_slab", "ifft2_slab",
     "fft3_pencil", "ifft3_pencil", "rfft3_pencil", "irfft3_pencil",
     "distribute", "collect",
@@ -65,25 +76,376 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
-# local building blocks (run per-device inside shard_map)
+# shared pad-and-crop layer (every decomposition path goes through these)
 # ---------------------------------------------------------------------------
+
+
+def _pad_axis(c: Complex, axis: int, target: int) -> Complex:
+    """Zero-pad one axis of an (re, im) pair up to ``target`` entries."""
+    pad = target - c[0].shape[axis]
+    if pad <= 0:
+        return c
+    widths = [(0, 0)] * c[0].ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(c[0], widths), jnp.pad(c[1], widths)
+
+
+def _crop_axis(c: Complex, axis: int, n: int) -> Complex:
+    """Crop one axis of a pair back to its true length ``n``."""
+    if c[0].shape[axis] == n:
+        return c
+    return (jax.lax.slice_in_dim(c[0], 0, n, axis=axis),
+            jax.lax.slice_in_dim(c[1], 0, n, axis=axis))
+
+
+def _fft_axis(plan: Plan, c: Complex, axis: int, inverse: bool = False
+              ) -> Complex:
+    """c2c transform along one (fully local) axis of a pair."""
+    if axis == c[0].ndim - 1 or axis == -1:
+        return execute_inverse(plan, c) if inverse else execute(plan, c)
+    ct = (jnp.moveaxis(c[0], axis, -1), jnp.moveaxis(c[1], axis, -1))
+    zt = execute_inverse(plan, ct) if inverse else execute(plan, ct)
+    return jnp.moveaxis(zt[0], -1, axis), jnp.moveaxis(zt[1], -1, axis)
+
+
+def hermitian_extend_last(c: Complex, n: int) -> Complex:
+    """Rebuild the full length-``n`` spectrum from the half spectrum of a
+    real signal along the last axis: ``F[k] = conj(F[n-k])`` for k > n//2.
+    Valid whenever every other axis is already in its real/spatial form."""
+    mh = n // 2 + 1
+    idx = np.arange(n - mh, 0, -1)          # tail k = mh..n-1  <-  n-k
+    return (jnp.concatenate([c[0], c[0][..., idx]], -1),
+            jnp.concatenate([c[1], -c[1][..., idx]], -1))
+
+
+def rows_rfft(planner: Planner, x: jax.Array, n: int) -> Complex:
+    """r2c FFT along the last axis for ANY length: even lengths use the
+    packed real codelet path, odd lengths fall back to a c2c transform of
+    the real signal cropped to the half spectrum."""
+    if n % 2 == 0:
+        return execute(planner.plan(n, kind="r2c"), x)
+    re, im = execute(planner.plan(n, kind="c2c"), (x, jnp.zeros_like(x)))
+    return re[..., : n // 2 + 1], im[..., : n // 2 + 1]
+
+
+def rows_irfft(planner: Planner, c: Complex, n: int) -> jax.Array:
+    """c2r inverse of :func:`rows_rfft` (input ``(..., n//2+1)``)."""
+    if n % 2 == 0:
+        return execute(planner.plan(n, kind="c2r"), c)
+    full = hermitian_extend_last(c, n)
+    return execute_inverse(planner.plan(n, kind="c2c"), full)[0]
+
+
+def _warm_rows_plan(planner: Planner, n: int, inverse: bool = False) -> None:
+    """Pre-plan the 1D stage :func:`rows_rfft` / :func:`rows_irfft` will
+    request, OUTSIDE any traced function — their trace-time lookups then hit
+    the planner's wisdom cache without triggering a wisdom write."""
+    if n % 2 == 0:
+        planner.plan(n, kind="c2r" if inverse else "r2c")
+    else:
+        planner.plan(n, kind="c2c")
 
 
 def _local_rows_rfft(x: jax.Array, plan: Plan, mh_pad: int) -> Complex:
     """r2c FFT along the last axis + zero-pad to the collective-divisible
     width (works for any number of leading batch axes)."""
     re, im = execute(plan, x)
-    pad = mh_pad - re.shape[-1]
-    if pad:
-        widths = ((0, 0),) * (re.ndim - 1) + ((0, pad),)
-        re = jnp.pad(re, widths)
-        im = jnp.pad(im, widths)
-    return re, im
+    return _pad_axis((re, im), -1, mh_pad)
+
+
+def _slab_backend(nd, chunks: int) -> CommBackend:
+    return get_backend(nd.comm[0] if nd.comm else "collective", chunks=chunks)
+
+
+def _pencil_backends(nd, chunks: int) -> Tuple[CommBackend, CommBackend]:
+    return resolve_axis_backends(nd.comm, nd.mesh_axes, chunks=chunks)
 
 
 # ---------------------------------------------------------------------------
-# slab-decomposed 2D r2c FFT
+# slab executor (1 mesh axis, ndim >= 2, leading batch dims, mixed radix)
 # ---------------------------------------------------------------------------
+#
+# Layout (forward, transform shape (n0, ..., nlast), P devices over `ax`):
+#
+#   input   (b..., n0p/P, ..., nlast)   last-axis FFT (r2c or c2c) local,
+#                                       then every middle axis, then pad the
+#                                       spectrum's last axis to lp
+#   xchg    split last, concat first -> (b..., n0p, ..., lp/P)
+#   ax0 FFT crop n0p -> n0, transform, re-pad to n0p
+#   xchg    split first, concat last -> (b..., n0p/P, ..., lp)
+#
+# n0p = pad_to(n0, P); lp = padded_half(nlast, P) for r2c, pad_to(nlast, P)
+# for c2c.  The padded bands are exactly zero throughout (zero columns stay
+# zero under FFTs along other axes), so `NdPlan.crop` recovers the exact
+# spectrum.
+
+
+def execute_slab(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
+                 chunks: int = 4, keep_transposed: bool = False,
+                 permuted_cols: bool = False):
+    """Forward slab transform of an :class:`~repro.core.api.NdPlan`.
+
+    ``x``: real array for ``kind="r2c"``, (re, im) pair for ``"c2c"``, with
+    any number of leading batch dims.  Returns the PADDED spectrum pair
+    (global trailing shape ``nd.padded_spectrum_shape``), sharded over the
+    first transform axis — crop with ``nd.crop`` for the exact transform.
+
+    ``keep_transposed`` / ``permuted_cols`` are the 2D-only layout
+    optimizations of the historical ``fft2_slab`` (skip the second exchange
+    / skip the column digit transpose).
+    """
+    d = len(nd.shape)
+    assert nd.decomp == "slab" and len(nd.mesh_axes) == 1
+    if keep_transposed or permuted_cols:
+        assert d == 2, "transposed/permuted layouts are 2D-only"
+    ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
+    pair_in = nd.kind == "c2c"
+    xr = x[0] if pair_in else x
+    bnd = xr.ndim - d
+    i0, il = bnd, bnd + d - 1
+    n0, nlast = nd.shape[0], nd.shape[-1]
+    n0p = pad_to(n0, p)
+    lp = nd.padded_spectrum_shape[-1]
+    backend = _slab_backend(nd, chunks)
+
+    if keep_transposed and n0p != n0:
+        raise ValueError("keep_transposed requires shape[0] divisible by "
+                         "the mesh axis (mixed radix keeps both exchanges)")
+    row_plan = planner.plan(nlast, kind="c2c") if pair_in else None
+    if not pair_in:
+        _warm_rows_plan(planner, nlast)
+    mid_plans = [planner.plan(nd.shape[k], kind="c2c")
+                 for k in range(1, d - 1)]
+    col_plan = planner.plan(n0, kind="c2c", permuted=permuted_cols)
+
+    if n0p != n0:                       # mixed radix: zero-pad sharded axis
+        widths = [(0, 0)] * xr.ndim
+        widths[i0] = (0, n0p - n0)
+        x = ((jnp.pad(x[0], widths), jnp.pad(x[1], widths)) if pair_in
+             else jnp.pad(x, widths))
+
+    def local(*args):
+        if pair_in:
+            y = execute(row_plan, args)                     # c2c last axis
+            y = _pad_axis(y, il, lp)
+        else:
+            y = rows_rfft(planner, args[0], nlast)          # r2c last axis
+            y = _pad_axis(y, il, lp)
+        for k, mp in enumerate(mid_plans):                  # middle axes
+            y = _fft_axis(mp, y, i0 + 1 + k)
+        y = backend.exchange(y, ax, split=il, concat=i0, p=p)
+        y = _crop_axis(y, i0, n0)                           # mixed radix
+        y = _fft_axis(col_plan, y, i0)                      # first axis
+        if keep_transposed:     # 2D: hand back the transposed local layout
+            return jnp.swapaxes(y[0], i0, il), jnp.swapaxes(y[1], i0, il)
+        y = _pad_axis(y, i0, n0p)
+        return backend.exchange(y, ax, split=i0, concat=il, p=p)
+
+    spec_in = batched_spec(P(ax, *(None,) * (d - 1)), bnd)
+    spec_out = batched_spec(
+        P(None, ax) if keep_transposed else P(ax, *(None,) * (d - 1)), bnd)
+    in_specs = (spec_in, spec_in) if pair_in else (spec_in,)
+    args = x if pair_in else (x,)
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=(spec_out, spec_out))(*args)
+
+
+def execute_slab_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
+                         planner: Planner, *, chunks: int = 4,
+                         from_transposed: bool = False,
+                         permuted_cols: bool = False):
+    """Inverse slab transform: consumes the PADDED spectrum pair produced by
+    :func:`execute_slab` (zero padded bands) and returns the spatial array —
+    real for ``kind="r2c"``, a pair for ``"c2c"`` — with the first transform
+    axis still padded to ``pad_to(n0, p)`` (crop with ``nd.shape[0]``)."""
+    d = len(nd.shape)
+    assert nd.decomp == "slab" and len(nd.mesh_axes) == 1
+    if from_transposed or permuted_cols:
+        assert d == 2, "transposed/permuted layouts are 2D-only"
+    ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
+    bnd = c[0].ndim - d
+    i0, il = bnd, bnd + d - 1
+    n0, nlast = nd.shape[0], nd.shape[-1]
+    n0p = pad_to(n0, p)
+    lp = nd.padded_spectrum_shape[-1]
+    ltrue = nd.spectrum_shape[-1]       # mh for r2c, nlast for c2c
+    backend = _slab_backend(nd, chunks)
+    col_plan = planner.plan(n0, kind="c2c", permuted=permuted_cols)
+    mid_plans = [planner.plan(nd.shape[k], kind="c2c")
+                 for k in range(1, d - 1)]
+    row_plan = planner.plan(nlast, kind="c2c") if nd.kind == "c2c" else None
+    if nd.kind == "r2c":
+        _warm_rows_plan(planner, nlast, inverse=True)
+
+    if from_transposed and n0p != n0:
+        raise ValueError("from_transposed requires shape[0] divisible by "
+                         "the mesh axis")
+
+    def local(cr: jax.Array, ci: jax.Array):
+        z = (cr, ci)
+        if from_transposed:
+            # first-axis inverse: in the transposed layout the axis is last
+            z = execute_inverse(col_plan, z)                # (lp/p, n0)
+            z = (jnp.swapaxes(z[0], i0, il), jnp.swapaxes(z[1], i0, il))
+        else:
+            z = backend.exchange(z, ax, split=il, concat=i0, p=p)
+            z = _crop_axis(z, i0, n0)
+            z = _fft_axis(col_plan, z, i0, inverse=True)
+            z = _pad_axis(z, i0, n0p)
+        z = backend.exchange(z, ax, split=i0, concat=il, p=p)
+        z = _crop_axis(z, il, ltrue)                        # drop padding
+        for k, mp in reversed(list(enumerate(mid_plans))):  # middle axes
+            z = _fft_axis(mp, z, i0 + 1 + k, inverse=True)
+        if nd.kind == "c2c":
+            return execute_inverse(row_plan, z)
+        return rows_irfft(planner, z, nlast)                # c2r last axis
+
+    spec_std = batched_spec(P(ax, *(None,) * (d - 1)), bnd)
+    spec_in = batched_spec(P(None, ax), bnd) if from_transposed else spec_std
+    out_specs = spec_std if nd.kind == "r2c" else (spec_std, spec_std)
+    return shard_map(local, mesh=mesh, in_specs=(spec_in, spec_in),
+                     out_specs=out_specs)(c[0], c[1])
+
+
+# ---------------------------------------------------------------------------
+# pencil executor (P3DFFT-style, 2D mesh, ndim == 3, batch dims, mixed radix)
+# ---------------------------------------------------------------------------
+#
+# Layout convention (forward direction), mesh axes (ax0, ax1) = (p0, p1):
+#
+#   input   (b..., Xp/p0, Yp/p1, Z)    Z-FFT local, pad Z -> Zp (or zh_pad)
+#   xchg 1  over ax1 (row communicator):   split Z, concat Y
+#           (b..., Xp/p0, Yp, Zp/p1)   crop Y, Y-FFT local, re-pad
+#   xchg 2  over ax0 (column communicator): split Y, concat X
+#           (b..., Xp,  Yp/p0, Zp/p1)  crop X, X-FFT local, re-pad
+#
+# Xp = pad_to(X, p0); Yp = pad_to(Y, lcm-multiple of both communicators);
+# Zp = pad_to(Z, p1) for c2c, padded_half(Z, p1) for r2c.  Communication
+# stays within row/column communicators — the P3DFFT advantage the paper
+# cites over slab decomposition.  The inverses retrace the same exchanges
+# backwards, so each mesh axis keeps its chosen comm backend both ways.
+
+
+def execute_pencil(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
+                   chunks: int = 4):
+    """Forward pencil transform of an :class:`~repro.core.api.NdPlan`
+    (``kind="c2c"``: (re, im) pair in, ``"r2c"``: real array in; any number
+    of leading batch dims).  Returns the PADDED spectrum pair, global
+    trailing shape ``nd.padded_spectrum_shape`` sharded
+    ``(None, ax0, ax1)`` — crop with ``nd.crop`` for the exact transform."""
+    assert nd.decomp == "pencil" and len(nd.mesh_axes) == 2
+    assert len(nd.shape) == 3, "pencil decomposition is 3D"
+    ax0, ax1 = nd.mesh_axes
+    p0, p1 = nd.mesh_shape
+    pair_in = nd.kind == "c2c"
+    xr = x[0] if pair_in else x
+    bnd = xr.ndim - 3
+    ix, iy, iz = bnd, bnd + 1, bnd + 2
+    nx, ny, nz = nd.shape
+    xp, yp, zp = nd.padded_spectrum_shape   # (Xp, Yp, Zp-or-zh_pad)
+    b0, b1 = _pencil_backends(nd, chunks)
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+    plan_z = planner.plan(nz, kind="c2c") if pair_in else None
+    if not pair_in:
+        _warm_rows_plan(planner, nz)
+
+    pads = [(0, 0)] * xr.ndim
+    pads[ix] = (0, xp - nx)
+    pads[iy] = (0, yp - ny)
+    if any(p != (0, 0) for p in pads):      # mixed radix: pad sharded axes
+        x = ((jnp.pad(x[0], pads), jnp.pad(x[1], pads)) if pair_in
+             else jnp.pad(x, pads))
+
+    def local(*args):
+        if pair_in:
+            z = execute(plan_z, args)                       # FFT along Z
+            z = _pad_axis(z, iz, zp)
+        else:
+            z = rows_rfft(planner, args[0], nz)             # r2c along Z
+            z = _pad_axis(z, iz, zp)
+        z = b1.exchange(z, ax1, split=iz, concat=iy, p=p1)  # Y local
+        z = _crop_axis(z, iy, ny)
+        z = _fft_axis(plan_y, z, iy)                        # FFT along Y
+        z = _pad_axis(z, iy, yp)
+        z = b0.exchange(z, ax0, split=iy, concat=ix, p=p0)  # X local
+        z = _crop_axis(z, ix, nx)
+        z = _fft_axis(plan_x, z, ix)                        # FFT along X
+        return _pad_axis(z, ix, xp)
+
+    spec_in = batched_spec(P(ax0, ax1, None), bnd)
+    spec_out = batched_spec(P(None, ax0, ax1), bnd)
+    in_specs = (spec_in, spec_in) if pair_in else (spec_in,)
+    args = x if pair_in else (x,)
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=(spec_out, spec_out))(*args)
+
+
+def execute_pencil_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
+                           planner: Planner, *, chunks: int = 4):
+    """Inverse pencil transform: PADDED spectrum pair in (zero padded
+    bands), spatial data out — a pair for ``kind="c2c"``, a real array for
+    ``"r2c"`` — with X/Y still padded to their communicator multiples
+    (crop with ``nd.shape``)."""
+    assert nd.decomp == "pencil" and len(nd.mesh_axes) == 2
+    ax0, ax1 = nd.mesh_axes
+    p0, p1 = nd.mesh_shape
+    bnd = c[0].ndim - 3
+    ix, iy, iz = bnd, bnd + 1, bnd + 2
+    nx, ny, nz = nd.shape
+    xp, yp, zp = nd.padded_spectrum_shape
+    ztrue = nd.spectrum_shape[-1]           # zh for r2c, nz for c2c
+    b0, b1 = _pencil_backends(nd, chunks)
+    plan_y = planner.plan(ny, kind="c2c")
+    plan_x = planner.plan(nx, kind="c2c")
+    plan_z = planner.plan(nz, kind="c2c") if nd.kind == "c2c" else None
+    if nd.kind == "r2c":
+        _warm_rows_plan(planner, nz, inverse=True)
+
+    def local(cr: jax.Array, ci: jax.Array):
+        z = (cr, ci)                                        # (Xp, Yp/p0, Zp/p1)
+        z = _crop_axis(z, ix, nx)
+        z = _fft_axis(plan_x, z, ix, inverse=True)          # inverse X
+        z = _pad_axis(z, ix, xp)
+        z = b0.exchange(z, ax0, split=ix, concat=iy, p=p0)  # (Xp/p0, Yp, ..)
+        z = _crop_axis(z, iy, ny)
+        z = _fft_axis(plan_y, z, iy, inverse=True)          # inverse Y
+        z = _pad_axis(z, iy, yp)
+        z = b1.exchange(z, ax1, split=iy, concat=iz, p=p1)  # (.., Yp/p1, Zp)
+        z = _crop_axis(z, iz, ztrue)                        # drop padding
+        if nd.kind == "c2c":
+            return execute_inverse(plan_z, z)               # inverse Z
+        return rows_irfft(planner, z, nz)                   # c2r along Z
+
+    spec_in = batched_spec(P(None, ax0, ax1), bnd)
+    spec_out = batched_spec(P(ax0, ax1, None), bnd)
+    out_specs = spec_out if nd.kind == "r2c" else (spec_out, spec_out)
+    return shard_map(local, mesh=mesh, in_specs=(spec_in, spec_in),
+                     out_specs=out_specs)(c[0], c[1])
+
+
+# ---------------------------------------------------------------------------
+# deprecated shape-specific shims (build an NdPlan, run the shared executor)
+# ---------------------------------------------------------------------------
+
+_DEPRECATED_EMITTED = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    """One DeprecationWarning per entry point per process."""
+    if name in _DEPRECATED_EMITTED:
+        return
+    _DEPRECATED_EMITTED.add(name)
+    warnings.warn(
+        f"repro.core.dfft.{name} is deprecated; use repro.core.api.plan_nd "
+        "and the fftn/ifftn/rfftn/irfftn front-end instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def _shim_plan(shape, kind, mesh, mesh_axes, comm, planner, decomp):
+    from .api import plan_nd
+    return plan_nd(tuple(shape), kind, mesh=mesh, axes=tuple(mesh_axes),
+                   comm=comm, planner=planner, decomp=decomp)
 
 
 def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
@@ -91,52 +453,21 @@ def fft2_slab(x: jax.Array, mesh: jax.sharding.Mesh, axis: str,
               comm: CommSpec = "collective", chunks: int = 4,
               keep_transposed: bool = False,
               permuted_cols: bool = False):
-    """Distributed 2D r2c FFT.
+    """DEPRECATED: distributed 2D r2c FFT (use ``plan_nd`` + ``rfftn``).
 
     x: real (N, M), sharded (P(axis), None).  Returns (re, im) of shape
     (N, mh_pad) sharded the same way (crop to M//2+1 for the exact rfft2),
-    or (mh_pad, N) sharded over rows if ``keep_transposed`` (saves the whole
-    second communication step when the consumer accepts transposed layout —
-    e.g. convolution pipelines that come straight back).
-
-    ``comm`` selects the exchange backend (see :mod:`repro.core.comm`);
-    ``"auto"`` plans it from the roofline model of ``planner``'s hardware,
-    ``"measure"`` times every backend on the live mesh once and caches the
-    verdict in the planner's wisdom store.
-
-    ``permuted_cols`` skips the column FFT's digit transpose (output columns
-    arrive in four-step permuted frequency order — valid for pointwise
-    spectral consumers; pair with ``ifft2_slab(..., permuted_cols=True)``).
-    One fewer memory pass per column transform.
+    or the transposed (mh_pad/P, N*P) folded layout if ``keep_transposed``
+    (saves the whole second communication step when the consumer accepts
+    transposed layout).  ``permuted_cols`` skips the column FFT's digit
+    transpose (pair with ``ifft2_slab(..., permuted_cols=True)``).
     """
+    _warn_deprecated("fft2_slab")
     planner = planner or Planner(backends=("jnp",))
-    n, m = x.shape
-    p = mesh.shape[axis]
-    if comm == "auto":
-        comm = plan_comm(n, m, p, hw=planner.hw)
-    elif comm == "measure":
-        comm = measure_comm_slab(n, m, mesh, axis, wisdom=planner.wisdom)
-    backend = get_backend(comm, chunks=chunks)
-    mh_pad = padded_half(m, p)
-    row_plan = planner.plan(m, kind="r2c")
-    col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
-
-    def local(xl: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        y = _local_rows_rfft(xl, row_plan, mh_pad)              # (n/p, mh_pad)
-        y = backend.exchange(y, axis, split=1, concat=0, p=p)   # (n, mh_pad/p)
-        # transpose AFTER communication (paper §3.2): write-contiguous rows
-        yt = (y[0].T, y[1].T)                                   # (mh_pad/p, n)
-        z = execute(col_plan, yt)                               # column FFTs
-        if keep_transposed:
-            return z
-        zt = (z[0].T, z[1].T)                                   # (n, mh_pad/p)
-        return backend.exchange(zt, axis, split=0, concat=1, p=p)
-
-    return shard_map(
-        local, mesh=mesh,
-        in_specs=P(axis, None),
-        out_specs=(P(None, axis) if keep_transposed else P(axis, None)),
-    )(x)
+    nd = _shim_plan(x.shape, "r2c", mesh, (axis,), comm, planner, "slab")
+    return execute_slab(nd, x, mesh, planner, chunks=chunks,
+                        keep_transposed=keep_transposed,
+                        permuted_cols=permuted_cols)
 
 
 def ifft2_slab(c: Complex, mesh: jax.sharding.Mesh, axis: str, m: int,
@@ -144,35 +475,67 @@ def ifft2_slab(c: Complex, mesh: jax.sharding.Mesh, axis: str, m: int,
                comm: CommSpec = "collective", chunks: int = 4,
                from_transposed: bool = False,
                permuted_cols: bool = False) -> jax.Array:
-    """Inverse of :func:`fft2_slab` back to a real (N, M) array."""
+    """DEPRECATED: inverse of :func:`fft2_slab` back to a real (N, M) array
+    (use ``plan_nd`` + ``irfftn``)."""
+    _warn_deprecated("ifft2_slab")
     planner = planner or Planner(backends=("jnp",))
-    n = c[0].shape[1] if from_transposed else c[0].shape[0]
     p = mesh.shape[axis]
-    if comm == "auto":
-        comm = plan_comm(n, m, p, hw=planner.hw)
-    elif comm == "measure":
-        # the inverse retraces the forward exchanges, so it shares the
-        # forward transform's wisdom key (and any cached verdict)
-        comm = measure_comm_slab(n, m, mesh, axis, wisdom=planner.wisdom)
-    backend = get_backend(comm, chunks=chunks)
-    mh = m // 2 + 1
-    col_plan = planner.plan(n, kind="c2c", permuted=permuted_cols)
-    row_plan = planner.plan(m, kind="c2r")
+    n = c[0].shape[1] // p if from_transposed else c[0].shape[0]
+    nd = _shim_plan((n, m), "r2c", mesh, (axis,), comm, planner, "slab")
+    return execute_slab_inverse(nd, c, mesh, planner, chunks=chunks,
+                                from_transposed=from_transposed,
+                                permuted_cols=permuted_cols)
 
-    def local(cr: jax.Array, ci: jax.Array) -> jax.Array:
-        z = (cr, ci)
-        if not from_transposed:                                 # (n/p, mh_pad)
-            z = backend.exchange(z, axis, split=1, concat=0, p=p)
-            z = (z[0].T, z[1].T)                                # (mh_pad/p, n)
-        zi = execute_inverse(col_plan, z)                       # inverse cols
-        zt = (zi[0].T, zi[1].T)                                 # (n, mh_pad/p)
-        y = backend.exchange(zt, axis, split=0, concat=1, p=p)  # (n/p, mh_pad)
-        y = (y[0][:, :mh], y[1][:, :mh])                        # crop padding
-        return execute(row_plan, y)                             # c2r rows
 
-    in_spec = P(None, axis) if from_transposed else P(axis, None)
-    return shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
-                     out_specs=P(axis, None))(c[0], c[1])
+def fft3_pencil(x: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                planner: Optional[Planner] = None,
+                comm: CommSpec = "collective", chunks: int = 4) -> Complex:
+    """DEPRECATED: 3D c2c pencil FFT of (X, Y, Z) sharded
+    (P(ax0), P(ax1), None) (use ``plan_nd`` + ``fftn``).  Output sharded
+    (None, P(ax0), P(ax1)).  ``comm`` may be one spec for both
+    communicators, a per-axis pair/dict, ``"auto"`` or ``"measure"``."""
+    _warn_deprecated("fft3_pencil")
+    planner = planner or Planner(backends=("jnp",))
+    nd = _shim_plan(x[0].shape, "c2c", mesh, axes, comm, planner, "pencil")
+    return execute_pencil(nd, x, mesh, planner, chunks=chunks)
+
+
+def ifft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                 planner: Optional[Planner] = None,
+                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
+    """DEPRECATED: inverse of :func:`fft3_pencil` (use ``plan_nd`` +
+    ``ifftn``)."""
+    _warn_deprecated("ifft3_pencil")
+    planner = planner or Planner(backends=("jnp",))
+    nd = _shim_plan(c[0].shape, "c2c", mesh, axes, comm, planner, "pencil")
+    return execute_pencil_inverse(nd, c, mesh, planner, chunks=chunks)
+
+
+def rfft3_pencil(x: jax.Array, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                 planner: Optional[Planner] = None,
+                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
+    """DEPRECATED: 3D r2c pencil FFT of a real (X, Y, Z) array (use
+    ``plan_nd`` + ``rfftn``).  Output: (re, im) of global shape
+    (X, Y, zh_pad) sharded (None, P(ax0), P(ax1)) — crop the last axis to
+    Z//2+1 for the exact ``numpy.fft.rfftn``."""
+    _warn_deprecated("rfft3_pencil")
+    planner = planner or Planner(backends=("jnp",))
+    nd = _shim_plan(x.shape, "r2c", mesh, axes, comm, planner, "pencil")
+    return execute_pencil(nd, x, mesh, planner, chunks=chunks)
+
+
+def irfft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
+                  nz: int, planner: Optional[Planner] = None,
+                  comm: CommSpec = "collective",
+                  chunks: int = 4) -> jax.Array:
+    """DEPRECATED: inverse of :func:`rfft3_pencil` back to a real (X, Y, Z)
+    array (use ``plan_nd`` + ``irfftn``).  Takes the *uncropped* padded
+    spectrum plus the original Z length ``nz``."""
+    _warn_deprecated("irfft3_pencil")
+    planner = planner or Planner(backends=("jnp",))
+    nx, ny = c[0].shape[0], c[0].shape[1]
+    nd = _shim_plan((nx, ny, nz), "r2c", mesh, axes, comm, planner, "pencil")
+    return execute_pencil_inverse(nd, c, mesh, planner, chunks=chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -187,195 +550,16 @@ def distribute(x: jax.Array, mesh: jax.sharding.Mesh, axis: str) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P(axis, None)))
 
 
-def collect(x: jax.Array) -> np.ndarray:
-    """Gather slabs back to a single host array (paper: gather/concat)."""
-    return np.asarray(jax.device_get(x))
+def collect(x, plan=None) -> np.ndarray:
+    """Gather slabs back to a single host array (paper: gather/concat).
 
-
-# ---------------------------------------------------------------------------
-# pencil-decomposed 3D FFTs (P3DFFT-style, 2D mesh)
-# ---------------------------------------------------------------------------
-#
-# Layout convention (forward direction), mesh axes (ax0, ax1) = (p0, p1):
-#
-#   input   (X/p0, Y/p1, Z)    Z-FFT local
-#   xchg 1  over ax1 (row communicator):   split Z, concat Y
-#           (X/p0, Y, Z/p1)    Y-FFT local
-#   xchg 2  over ax0 (column communicator): split Y, concat X
-#           (X,   Y/p0, Z/p1)  X-FFT local
-#
-# Communication stays within row/column communicators — the P3DFFT advantage
-# the paper cites over slab decomposition.  The inverses retrace the same
-# exchanges backwards, so each mesh axis keeps its chosen comm backend in
-# both directions.
-
-
-def _pencil_backends(comm, axes, chunks, planner, shape, mesh, kind):
-    """Resolve the per-axis comm backends for a pencil transform.
-
-    ``"auto"`` entries (whole-argument or per-axis) are planned from the
-    roofline model; ``"measure"`` entries are timed on the live mesh, one
-    measurement per row/column communicator, with verdicts cached in the
-    planner's wisdom store (and a process-global memo, so retraces are
-    free).  Mixed per-axis arguments only pay for the axes that ask.
-    """
-    specs = list(_normalize_axis_specs(comm, axes))
-    special = [s for s in specs if isinstance(s, str)]
-    if "auto" in special:
-        p0, p1 = mesh.shape[axes[0]], mesh.shape[axes[1]]
-        planned = plan_comm_pencil(shape, (p0, p1), hw=planner.hw, kind=kind)
-        specs = [planned[i] if s == "auto" else s
-                 for i, s in enumerate(specs)]
-    if "measure" in special:
-        measured = measure_comm_pencil(
-            shape, mesh, axes, kind=kind, wisdom=planner.wisdom,
-            which=tuple(s == "measure" for s in specs))
-        specs = [measured[i] if s == "measure" else s
-                 for i, s in enumerate(specs)]
-    return resolve_axis_backends(tuple(specs), axes, chunks=chunks)
-
-
-def fft3_pencil(x: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
-                planner: Optional[Planner] = None,
-                comm: CommSpec = "collective", chunks: int = 4) -> Complex:
-    """3D c2c FFT of (X, Y, Z) sharded (P(ax0), P(ax1), None).
-
-    Output sharded (None, P(ax0), P(ax1)) over (X -> local, Y, Z).  ``comm``
-    may be one spec for both communicators, a per-axis ``(ax0_spec,
-    ax1_spec)`` pair, a dict keyed by mesh-axis name, or ``"auto"``.
-    """
-    planner = planner or Planner(backends=("jnp",))
-    nx, ny, nz = x[0].shape
-    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
-                              (nx, ny, nz), mesh, "c2c")
-    plan_z = planner.plan(nz, kind="c2c")
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-    ax0, ax1 = axes
-    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
-
-    def local(cr: jax.Array, ci: jax.Array) -> Complex:
-        z = execute(plan_z, (cr, ci))                           # FFT along Z
-        # bring Y local: exchange Z<->Y within the ax1 communicator
-        z = b1.exchange(z, ax1, split=2, concat=1, p=p1)        # (x/p0, y, z/p1)
-        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
-        zy = execute(plan_y, zt)                                # FFT along Y
-        zy = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
-        # bring X local: exchange Y<->X within the ax0 communicator
-        zy = b0.exchange(zy, ax0, split=1, concat=0, p=p0)      # (x, y/p0, z/p1)
-        zx = (jnp.moveaxis(zy[0], 0, -1), jnp.moveaxis(zy[1], 0, -1))
-        zz = execute(plan_x, zx)                                # FFT along X
-        return jnp.moveaxis(zz[0], -1, 0), jnp.moveaxis(zz[1], -1, 0)
-
-    return shard_map(local, mesh=mesh,
-                     in_specs=(P(ax0, ax1, None), P(ax0, ax1, None)),
-                     out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x[0], x[1])
-
-
-def ifft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
-                 planner: Optional[Planner] = None,
-                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
-    """Inverse of :func:`fft3_pencil`: (X, Y/p0, Z/p1) spectrum back to the
-    (X/p0, Y/p1, Z) spatial layout.  Retraces the forward exchanges in
-    reverse, per-axis comm backends as in the forward direction."""
-    planner = planner or Planner(backends=("jnp",))
-    nx, ny, nz = c[0].shape                                     # global shape
-    ax0, ax1 = axes
-    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
-    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
-                              (nx, ny, nz), mesh, "c2c")
-    plan_z = planner.plan(nz, kind="c2c")
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-
-    def local(cr: jax.Array, ci: jax.Array) -> Complex:
-        z = (cr, ci)                                            # (x, y/p0, z/p1)
-        zx = (jnp.moveaxis(z[0], 0, -1), jnp.moveaxis(z[1], 0, -1))
-        zx = execute_inverse(plan_x, zx)                        # inverse X
-        z = (jnp.moveaxis(zx[0], -1, 0), jnp.moveaxis(zx[1], -1, 0))
-        z = b0.exchange(z, ax0, split=0, concat=1, p=p0)        # (x/p0, y, z/p1)
-        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
-        zy = execute_inverse(plan_y, zt)                        # inverse Y
-        z = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
-        z = b1.exchange(z, ax1, split=1, concat=2, p=p1)        # (x/p0, y/p1, z)
-        return execute_inverse(plan_z, z)                       # inverse Z
-
-    return shard_map(local, mesh=mesh,
-                     in_specs=(P(None, ax0, ax1), P(None, ax0, ax1)),
-                     out_specs=(P(ax0, ax1, None), P(ax0, ax1, None)))(c[0], c[1])
-
-
-def rfft3_pencil(x: jax.Array, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
-                 planner: Optional[Planner] = None,
-                 comm: CommSpec = "collective", chunks: int = 4) -> Complex:
-    """3D r2c FFT of a real (X, Y, Z) array sharded (P(ax0), P(ax1), None).
-
-    The contiguous Z axis gets the r2c transform; its half spectrum is
-    zero-padded to ``padded_half(Z, p1)`` for collective divisibility, the
-    same convention as the 2D slab path.  Output: (re, im) of global shape
-    (X, Y, zh_pad) sharded (None, P(ax0), P(ax1)) — crop the last axis to
-    Z//2+1 for the exact ``numpy.fft.rfftn``.
-    """
-    planner = planner or Planner(backends=("jnp",))
-    nx, ny, nz = x.shape
-    ax0, ax1 = axes
-    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
-    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
-                              (nx, ny, nz), mesh, "r2c")
-    zh_pad = padded_half(nz, p1)
-    plan_z = planner.plan(nz, kind="r2c")
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-
-    def local(xl: jax.Array) -> Complex:
-        z = _local_rows_rfft(xl, plan_z, zh_pad)                # (x/p0, y/p1, zh_pad)
-        z = b1.exchange(z, ax1, split=2, concat=1, p=p1)        # (x/p0, y, zh_pad/p1)
-        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
-        zy = execute(plan_y, zt)                                # FFT along Y
-        zy = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
-        zy = b0.exchange(zy, ax0, split=1, concat=0, p=p0)      # (x, y/p0, zh_pad/p1)
-        zx = (jnp.moveaxis(zy[0], 0, -1), jnp.moveaxis(zy[1], 0, -1))
-        zz = execute(plan_x, zx)                                # FFT along X
-        return jnp.moveaxis(zz[0], -1, 0), jnp.moveaxis(zz[1], -1, 0)
-
-    return shard_map(local, mesh=mesh,
-                     in_specs=P(ax0, ax1, None),
-                     out_specs=(P(None, ax0, ax1), P(None, ax0, ax1)))(x)
-
-
-def irfft3_pencil(c: Complex, mesh: jax.sharding.Mesh, axes: Tuple[str, str],
-                  nz: int, planner: Optional[Planner] = None,
-                  comm: CommSpec = "collective",
-                  chunks: int = 4) -> jax.Array:
-    """Inverse of :func:`rfft3_pencil` back to a real (X, Y, Z) array.
-
-    Takes the *uncropped* padded spectrum (global (X, Y, zh_pad), sharded
-    (None, P(ax0), P(ax1))) plus the original Z length ``nz``, mirroring
-    :func:`ifft2_slab`'s padded-half cropping."""
-    planner = planner or Planner(backends=("jnp",))
-    nx, ny = c[0].shape[0], c[0].shape[1]                       # global shape
-    ax0, ax1 = axes
-    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
-    b0, b1 = _pencil_backends(comm, axes, chunks, planner,
-                              (nx, ny, nz), mesh, "c2r")
-    zh = nz // 2 + 1
-    plan_zr = planner.plan(nz, kind="c2r")
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-
-    def local(cr: jax.Array, ci: jax.Array) -> jax.Array:
-        z = (cr, ci)                                            # (x, y/p0, zh_pad/p1)
-        zx = (jnp.moveaxis(z[0], 0, -1), jnp.moveaxis(z[1], 0, -1))
-        zx = execute_inverse(plan_x, zx)                        # inverse X
-        z = (jnp.moveaxis(zx[0], -1, 0), jnp.moveaxis(zx[1], -1, 0))
-        z = b0.exchange(z, ax0, split=0, concat=1, p=p0)        # (x/p0, y, zh_pad/p1)
-        zt = (jnp.swapaxes(z[0], 1, 2), jnp.swapaxes(z[1], 1, 2))
-        zy = execute_inverse(plan_y, zt)                        # inverse Y
-        z = (jnp.swapaxes(zy[0], 1, 2), jnp.swapaxes(zy[1], 1, 2))
-        z = b1.exchange(z, ax1, split=1, concat=2, p=p1)        # (x/p0, y/p1, zh_pad)
-        z = (z[0][..., :zh], z[1][..., :zh])                    # crop padding
-        return execute(plan_zr, z)                              # c2r along Z
-
-    return shard_map(local, mesh=mesh,
-                     in_specs=(P(None, ax0, ax1), P(None, ax0, ax1)),
-                     out_specs=P(ax0, ax1, None))(c[0], c[1])
+    With an :class:`~repro.core.api.NdPlan` the padded collective bands are
+    cropped away (``plan.crop``), so callers get the exact transform instead
+    of having to know the padded column count.  Pairs are cropped per
+    member."""
+    if isinstance(x, tuple):
+        return tuple(collect(a, plan) for a in x)
+    out = np.asarray(jax.device_get(x))
+    if plan is not None:
+        out = out[(Ellipsis,) + plan.crop]
+    return out

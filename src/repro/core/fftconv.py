@@ -38,7 +38,7 @@ from jax.sharding import PartitionSpec as P
 from . import algo
 from .comm import (CommBackend, CommSpec, get_backend, measure_comm_conv,
                    plan_comm_conv)
-from .compat import shard_map
+from .compat import batched_spec, shard_map
 from .plan import Planner
 
 Complex = algo.Complex
@@ -234,9 +234,12 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
         prod = algo.cmul(uf, kf)
         return _dist_ifft_permuted(prod, axis, p, n1, n2, planner, backend)[0]
 
+    # the (B, L, D) activations and (D, L) filters share the batched-spec
+    # convention of the dfft executors: one leading replicated batch dim
+    # prepended to the sharded-sequence spec
     y = shard_map(
         local, mesh=mesh,
-        in_specs=(P(None, axis, None), P(None, axis)),
-        out_specs=P(None, axis, None),
+        in_specs=(batched_spec(P(axis, None), 1), batched_spec(P(axis), 1)),
+        out_specs=batched_spec(P(axis, None), 1),
     )(up, kp)
     return y[:, :l, :].astype(u.dtype)

@@ -197,6 +197,21 @@ class Planner:
                               "measured": best.measured_cost})
         return best
 
+    # -- N-D decomposition planning (the guru interface) ----------------------
+
+    def plan_nd(self, shape, kind: str = "c2c", mesh=None, axes=None,
+                mode: Optional[str] = None, comm="auto", decomp=None):
+        """Plan an N-D (possibly distributed) transform with THIS planner's
+        hardware profile and wisdom store (delegates to
+        :func:`repro.core.api.plan_nd`).  ``mode`` defaults to the
+        planner's own mode, so a measured Planner measures decompositions
+        too."""
+        from .api import plan_nd
+        if mode is None:
+            mode = "measured" if self.mode == "measured" else "estimate"
+        return plan_nd(shape, kind, mesh=mesh, axes=axes, mode=mode,
+                       comm=comm, planner=self, decomp=decomp)
+
     # -- communication planning (paper §5.3: parcelport choice) ---------------
 
     def plan_comm(self, n: int, m: int, p: int,

@@ -11,6 +11,9 @@ autotuners, namespaced by key prefix:
 * ``comm/...`` — exchange-backend verdicts written by the
   :func:`repro.core.comm.measure_comm` family (key encodes decomposition,
   global shape, mesh shape, kind, and which mesh-axis exchange).
+* ``dfft/...`` — N-D decomposition verdicts (local vs slab vs pencil, with
+  mesh-axis assignment and resolved comm specs) written by
+  :func:`repro.core.api.plan_nd`.
 
 On-disk schema (one file, stable across both namespaces)::
 
@@ -37,6 +40,7 @@ VERSION = 1
 
 PLAN_NS = "plan/"
 COMM_NS = "comm/"
+DFFT_NS = "dfft/"   # N-D decomposition verdicts (repro.core.api.plan_nd)
 
 
 class WisdomStore:

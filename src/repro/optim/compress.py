@@ -57,18 +57,24 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, pad: int,
 
 
 def choose_psum_comm(mesh, axis_name: str, shape, mode: str = "auto",
-                     wisdom=None, hw=None) -> str:
+                     wisdom=None, hw=None, planner=None) -> str:
     """Resolve a ``comm`` spec for :func:`compressed_psum` OUTSIDE shard_map.
 
     ``mode="auto"`` applies the gather roofline
     (:func:`repro.core.comm.plan_comm_gather`) for the ``hw`` profile
-    (default TPU_V5E — pass ``planner.hw`` to match the FFT entry points);
-    ``mode="measure"`` times the monolithic vs chunked gathers on the live
-    mesh for this payload size
+    (default TPU_V5E); ``mode="measure"`` times the monolithic vs chunked
+    gathers on the live mesh for this payload size
     (:func:`repro.core.comm.measure_comm_gather`), caching the verdict under
     a ``comm/gather/*`` wisdom key.  Any other mode is passed through
     verbatim, so callers can thread one config string end to end.
+
+    Pass ``planner=`` to resolve against the same hardware profile and
+    unified wisdom store the FFT front-end (:func:`repro.core.api.plan_nd`)
+    plans with — one planner, every autotuned choice.
     """
+    if planner is not None:
+        hw = hw or planner.hw
+        wisdom = wisdom if wisdom is not None else planner.wisdom
     n = math.prod(shape)
     if mode == "auto":
         return plan_comm_gather(n, mesh.shape[axis_name], block=BLOCK, hw=hw)

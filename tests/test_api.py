@@ -1,0 +1,225 @@
+"""Unit tests for the planned N-D front-end (repro.core.api).
+
+Decomposition scoring, mesh-axis assignment, NdPlan padding/cropping
+properties, dfft/* wisdom caching, and the deprecated-shim contract all run
+on abstract or 1-device meshes, so this is tier-1-fast; the live 8-device
+acceptance matrix runs in tests/_dist_worker.py.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import api, dfft, plan
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return plan.Planner(backends=("jnp",))
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("fft",))
+
+
+@pytest.fixture(scope="module")
+def mesh2():
+    return jax.make_mesh((1, 1), ("mx", "my"))
+
+
+# ---------------------------------------------------------------------------
+# decomposition planning (abstract meshes: pure roofline, no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_nd_local_for_small_slab_for_large(planner):
+    small = api.plan_nd((64, 64), "r2c", mesh={"fft": 8}, planner=planner)
+    assert small.decomp == "local"
+    large = api.plan_nd((1024, 1024), "r2c", mesh={"fft": 8},
+                        planner=planner)
+    assert large.decomp == "slab" and large.mesh_axes == ("fft",)
+    assert large.est_cost < api.plan_nd(
+        (1024, 1024), "r2c", mesh={"fft": 8}, planner=planner,
+        decomp="local").est_cost
+
+
+def test_plan_nd_pencil_for_large_3d(planner):
+    nd = api.plan_nd((128, 128, 128), "c2c", mesh={"mx": 4, "my": 2},
+                     planner=planner)
+    assert nd.decomp == "pencil"
+    assert set(nd.mesh_axes) == {"mx", "my"}
+    assert len(nd.comm) == 2
+
+
+def test_plan_nd_no_mesh_is_local(planner):
+    nd = api.plan_nd((256, 256), "c2c", planner=planner)
+    assert nd.decomp == "local" and nd.mesh_axes == () and nd.comm == ()
+
+
+def test_plan_nd_mesh_axis_assignment_minimizes_padding(planner):
+    # X=10 pads to 12 over p0=4 but to 10 over p0=2: the planner must
+    # notice that assignment changes the padded byte count
+    nd = api.plan_nd((10, 16, 2048), "c2c", mesh={"mx": 4, "my": 2},
+                     planner=planner, comm="collective")
+    if nd.decomp == "pencil":
+        a, b = nd.padded_spectrum_shape, nd.shape
+        alt = api.plan_nd((10, 16, 2048), "c2c", mesh={"mx": 4, "my": 2},
+                          planner=planner, decomp="pencil",
+                          axes=tuple(reversed(nd.mesh_axes)))
+        assert np.prod(a) <= np.prod(alt.padded_spectrum_shape), (nd, alt)
+
+
+def test_plan_nd_1d_stays_local(planner):
+    nd = api.plan_nd((4096,), "c2c", mesh={"fft": 8}, planner=planner)
+    assert nd.decomp == "local"
+
+
+# ---------------------------------------------------------------------------
+# NdPlan padding / cropping properties (the shared pad-and-crop contract)
+# ---------------------------------------------------------------------------
+
+
+def test_ndplan_crop_and_padding_mixed_radix(planner):
+    nd = api.plan_nd((10, 12), "r2c", mesh={"s": 3}, planner=planner,
+                     decomp="slab", axes=("s",))
+    assert nd.spectrum_shape == (10, 7)
+    assert nd.padded_spectrum_shape == (12, 9)      # both padded to mult 3
+    assert nd.padded_input_shape == (12, 12)
+    assert nd.crop == (slice(0, 10), slice(0, 7))
+
+
+def test_ndplan_pencil_y_padding_divides_both_communicators(planner):
+    nd = api.plan_nd((8, 6, 16), "c2c", mesh={"mx": 4, "my": 3},
+                     planner=planner, decomp="pencil", axes=("mx", "my"))
+    xp, yp, zp = nd.padded_spectrum_shape
+    assert yp % 4 == 0 and yp % 3 == 0              # lcm, not sequential pad
+    assert xp % 4 == 0 and zp % 3 == 0
+
+
+def test_collect_crops_via_plan(planner, mesh1):
+    nd = api.plan_nd((6, 10), "r2c", mesh=mesh1, planner=planner,
+                     decomp="slab", axes=("fft",))
+    x = RNG.standard_normal((6, 10)).astype(np.float32)
+    padded = api.execute_nd(nd, x, mesh=mesh1, planner=planner)
+    re, im = dfft.collect(padded, nd)
+    ref = np.fft.rfftn(x)
+    assert re.shape == ref.shape
+    np.testing.assert_allclose(re + 1j * im, ref, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dfft/* wisdom caching
+# ---------------------------------------------------------------------------
+
+
+def test_plan_nd_verdict_cached_in_wisdom(planner):
+    before = len(list(planner.wisdom.keys("dfft/")))
+    nd = api.plan_nd((96, 320), "r2c", mesh={"fft": 8}, planner=planner)
+    keys = list(planner.wisdom.keys("dfft/"))
+    assert len(keys) == before + 1
+    rec = planner.wisdom.get(
+        "dfft/96x320/r2c/fft8/estimate/auto")
+    assert rec is not None and rec["decomp"] == nd.decomp
+    # a second call reconstructs the identical plan from the record
+    nd2 = api.plan_nd((96, 320), "r2c", mesh={"fft": 8}, planner=planner)
+    assert nd2 == nd
+
+
+def test_plan_nd_instance_comm_not_cached(planner):
+    from repro.core.comm import CollectiveBackend
+    before = len(list(planner.wisdom.keys("dfft/")))
+    api.plan_nd((64, 128), "c2c", mesh={"fft": 8}, planner=planner,
+                comm=CollectiveBackend())
+    assert len(list(planner.wisdom.keys("dfft/"))) == before
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims: old entry points build NdPlans, warn once, match new
+# ---------------------------------------------------------------------------
+
+
+def test_fft2_slab_shim_matches_front_end(planner, mesh1):
+    n, m = 16, 32
+    x = RNG.standard_normal((n, m)).astype(np.float32)
+    xs = jax.device_put(x, NamedSharding(mesh1, P("fft", None)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = dfft.fft2_slab(xs, mesh1, "fft", planner)
+    nd = api.plan_nd((n, m), "r2c", mesh=mesh1, planner=planner,
+                     decomp="slab", axes=("fft",), comm="collective")
+    new = api.execute_nd(nd, xs, mesh=mesh1, planner=planner)
+    np.testing.assert_array_equal(np.asarray(old[0]), np.asarray(new[0]))
+    np.testing.assert_array_equal(np.asarray(old[1]), np.asarray(new[1]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        back = dfft.ifft2_slab(old, mesh1, "fft", m, planner)
+    assert np.max(np.abs(np.asarray(back) - x)) < 1e-3
+
+
+def test_pencil_shim_matches_front_end(planner, mesh2):
+    x = (RNG.standard_normal((8, 8, 16))
+         + 1j * RNG.standard_normal((8, 8, 16))).astype(np.complex64)
+    pair = (jax.numpy.asarray(np.real(x).astype(np.float32)),
+            jax.numpy.asarray(np.imag(x).astype(np.float32)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = dfft.fft3_pencil(pair, mesh2, ("mx", "my"), planner)
+    nd = api.plan_nd((8, 8, 16), "c2c", mesh=mesh2, planner=planner,
+                     decomp="pencil", axes=("mx", "my"), comm="collective")
+    new = api.execute_nd(nd, pair, mesh=mesh2, planner=planner)
+    np.testing.assert_array_equal(np.asarray(old[0]), np.asarray(new[0]))
+    np.testing.assert_array_equal(np.asarray(old[1]), np.asarray(new[1]))
+
+
+def test_shims_warn_deprecation_once_per_process(planner, mesh1):
+    dfft._DEPRECATED_EMITTED.discard("fft2_slab")
+    x = RNG.standard_normal((8, 16)).astype(np.float32)
+    xs = jax.device_put(x, NamedSharding(mesh1, P("fft", None)))
+    with pytest.warns(DeprecationWarning, match="fft2_slab is deprecated"):
+        dfft.fft2_slab(xs, mesh1, "fft", planner)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        dfft.fft2_slab(xs, mesh1, "fft", planner)   # second call: silent
+
+
+# ---------------------------------------------------------------------------
+# front-end numerics on 1-device meshes (full matrix in tests/test_dfft_matrix)
+# ---------------------------------------------------------------------------
+
+
+def test_fftn_matches_numpy_all_decomps(planner, mesh1, mesh2):
+    x = (RNG.standard_normal((6, 10, 9))
+         + 1j * RNG.standard_normal((6, 10, 9))).astype(np.complex64)
+    ref = np.fft.fftn(x)
+    for decomp, mesh, axes in (("local", None, None),
+                               ("slab", mesh1, ("fft",)),
+                               ("pencil", mesh2, ("mx", "my"))):
+        nd = api.plan_nd((6, 10, 9), "c2c", mesh=mesh, planner=planner,
+                         decomp=decomp, axes=axes)
+        re, im = api.fftn(x, mesh=mesh, plan=nd, planner=planner)
+        err = np.max(np.abs((np.asarray(re) + 1j * np.asarray(im)) - ref)) \
+            / np.max(np.abs(ref))
+        assert err < 1e-4, decomp
+        br, bi = api.ifftn((re, im), mesh=mesh, plan=nd, planner=planner)
+        assert np.max(np.abs((np.asarray(br) + 1j * np.asarray(bi)) - x)) \
+            < 1e-3, decomp
+
+
+def test_rfftn_odd_and_batched(planner, mesh1):
+    x = RNG.standard_normal((2, 3, 12, 15)).astype(np.float32)
+    ref = np.fft.rfftn(x, axes=(-2, -1))
+    nd = api.plan_nd((12, 15), "r2c", mesh=mesh1, planner=planner,
+                     decomp="slab", axes=("fft",))
+    re, im = api.rfftn(x, mesh=mesh1, plan=nd, planner=planner, ndim=2)
+    err = np.max(np.abs((np.asarray(re) + 1j * np.asarray(im)) - ref)) \
+        / np.max(np.abs(ref))
+    assert err < 1e-4
+    back = api.irfftn((re, im), shape=(12, 15), mesh=mesh1, plan=nd,
+                      planner=planner)
+    assert np.max(np.abs(np.asarray(back) - x)) < 1e-3

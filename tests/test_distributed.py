@@ -17,7 +17,7 @@ def test_distributed_suite():
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "_dist_worker.py")],
-        env=env, capture_output=True, text=True, timeout=1200)
+        env=env, capture_output=True, text=True, timeout=2400)
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr[-4000:])
     assert proc.returncode == 0

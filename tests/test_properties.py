@@ -139,6 +139,80 @@ def test_plan_execute_roundtrip_r2c_c2r(n, backend, seed):
                                atol=2e-3 * max(np.abs(x).max(), 1))
 
 
+# ---------------------------------------------------------------------------
+# the planned N-D front-end: fftn/rfftn round-trip and match numpy over
+# random shapes (odd/prime axis lengths and leading batch dims included) on
+# every decomposition the mesh supports.  In the main pytest process the
+# meshes are 1-device (the plumbing + pad-and-crop math); the same sweep
+# runs on real 4- and 8-device CPU meshes in tests/_dist_worker.py.
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+
+from repro.core import api  # noqa: E402
+
+AXIS_SIZES = st.sampled_from([4, 6, 7, 8, 9, 12, 13, 16])
+N_BATCH = st.integers(min_value=0, max_value=2)
+DECOMP = st.sampled_from(["local", "slab", "pencil"])
+
+
+def _fftn_meshes():
+    """1-, 4- and 8-device meshes, as the running process allows (pytest's
+    main process sees 1 device; tests/_dist_worker.py re-runs with 8)."""
+    n = len(jax.devices())
+    out = {}
+    for count, shape2 in ((1, (1, 1)), (4, (2, 2)), (8, (4, 2))):
+        if count <= n:
+            out[count] = (jax.make_mesh((count,), ("fft",)),
+                          jax.make_mesh(shape2, ("mx", "my")))
+    return out
+
+
+_MESHES = _fftn_meshes()
+_PLANNER = plan_mod.Planner(backends=("jnp",))
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(dims=st.lists(AXIS_SIZES, min_size=2, max_size=3),
+       nb=N_BATCH, decomp=DECOMP, seed=st.integers(0, 2 ** 20),
+       devices=st.sampled_from([1, 4, 8]))
+def test_fftn_rfftn_roundtrip_matches_numpy(dims, nb, decomp, seed, devices):
+    shape = tuple(dims)
+    if decomp == "pencil" and len(shape) != 3:
+        decomp = "slab"
+    meshes = _MESHES.get(devices) or _MESHES[1]
+    mesh, axes = ((meshes[0], ("fft",)) if decomp == "slab"
+                  else (meshes[1], ("mx", "my")) if decomp == "pencil"
+                  else (None, None))
+    rng = np.random.default_rng(seed)
+    batch = tuple(rng.integers(1, 3, size=nb))
+    x = rng.standard_normal(batch + shape).astype(np.float32)
+    tf_axes = tuple(range(-len(shape), 0))
+
+    nd = api.plan_nd(shape, "r2c", mesh=mesh, planner=_PLANNER,
+                     decomp=decomp, axes=axes)
+    re, im = api.rfftn(x, mesh=mesh, plan=nd, planner=_PLANNER,
+                       ndim=len(shape))
+    ref = np.fft.rfftn(x, axes=tf_axes)
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert got.shape == ref.shape
+    scale = max(np.max(np.abs(ref)), 1.0)
+    np.testing.assert_allclose(got, ref, atol=2e-4 * scale * len(shape))
+    back = api.irfftn((re, im), shape=shape, mesh=mesh, plan=nd,
+                      planner=_PLANNER)
+    np.testing.assert_allclose(np.asarray(back), x,
+                               atol=2e-4 * scale)
+
+    ndc = api.plan_nd(shape, "c2c", mesh=mesh, planner=_PLANNER,
+                      decomp=decomp, axes=axes)
+    cre, cim = api.fftn(x, mesh=mesh, plan=ndc, planner=_PLANNER,
+                        ndim=len(shape))
+    refc = np.fft.fftn(x, axes=tf_axes)
+    gotc = np.asarray(cre) + 1j * np.asarray(cim)
+    np.testing.assert_allclose(gotc, refc, atol=2e-4 * scale * len(shape))
+
+
 @pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(ns=st.lists(PLAN_SIZES, min_size=1, max_size=3, unique=True),
