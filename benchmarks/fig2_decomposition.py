@@ -37,19 +37,29 @@ def run(n: int = 512) -> None:
          f"stage_sum_over_fused={total / t_fused:.2f}")
 
     # ------------------------------------------------------------------
-    # decomposition planner column: local vs slab vs pencil vs auto, per
-    # shape, on the reference 8-way and 4x2 meshes (roofline scores)
+    # decomposition planner column: local vs slab vs pencil vs factor1d
+    # vs auto, per shape, on reference 8-way / 4x2 / 2x2x2 meshes
+    # (roofline scores; pencil beyond 3D and distributed 1D included)
     # ------------------------------------------------------------------
+    def supported(decomp, shape, kind, mesh):
+        # derive feasibility from the planner's own candidate space so the
+        # benchmark column can never disagree with what plan_nd enumerates
+        return decomp == "local" or any(
+            dec == decomp for dec, _ in api._candidates(shape, kind, mesh))
+
     for shape, kind, mesh in (
             ((64, 64), "r2c", {"fft": 8}),
             ((n, n), "r2c", {"fft": 8}),
             ((4 * n, 4 * n), "r2c", {"fft": 8}),
             ((64, 64, 64), "c2c", {"mx": 4, "my": 2}),
-            ((128, 128, 128), "c2c", {"mx": 4, "my": 2})):
+            ((128, 128, 128), "c2c", {"mx": 4, "my": 2}),
+            ((64, 64, 32, 32), "c2c", {"mx": 4, "my": 2}),     # 4D, k=2
+            ((32, 32, 32, 64), "c2c", {"ma": 2, "mb": 2, "mc": 2}),  # k=3
+            ((1 << 20,), "c2c", {"fft": 8})):                  # dist 1D
         tag = "x".join(str(s) for s in shape)
         scores = {}
         for decomp in api.DECOMPS:
-            if decomp == "pencil" and len(shape) != 3:
+            if not supported(decomp, shape, kind, mesh):
                 continue
             nd = planner.plan_nd(shape, kind, mesh=mesh, decomp=decomp)
             scores[decomp] = nd.est_cost
@@ -59,6 +69,13 @@ def run(n: int = 512) -> None:
         emit(f"fig2/decomp/auto/{tag}", auto.est_cost,
              f"picked={auto.decomp};"
              + ";".join(f"{k}={v:.2e}" for k, v in scores.items()))
+        # the planned output layout: what the saved restore exchange is
+        # worth on this shape (slab decompositions only)
+        if len(shape) >= 2:
+            tra = planner.plan_nd(shape, kind, mesh=mesh, decomp="slab",
+                                  output_layout="transposed")
+            emit(f"fig2/decomp/slab_transposed/{tag}", tra.est_cost,
+                 f"saved_vs_slab={scores['slab'] - tra.est_cost:.2e}")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,11 @@ chunks).
 
 Everything goes through the planned front-end (`repro.core.api.plan_nd` +
 the `fftn` family) with forced decompositions: the 1D slab layout (8-way
-mesh, 2D r2c) and the 2D pencil layout (4x2 mesh, 3D c2c with row/column
-communicators), plus mixed per-axis backend selection on the pencil path.
+mesh, 2D r2c, including the planned transposed output layout that skips
+the restore exchange), the 2D pencil layout (4x2 mesh, 3D c2c with
+row/column communicators, mixed per-axis backend selection), the 4D k=3
+pencil chain (2x2x2 mesh), and the factor-split distributed 1D transform
+(three 1/P exchanges vs one full gather).
 
 A final section reproduces the paper's plan-mode trade-off at BOTH planning
 layers: the comm layer (roofline ESTIMATE choice vs on-mesh MEASURE choice
@@ -80,19 +83,39 @@ def _worker() -> None:
             emit(f"fig6/{comm}/n{n}", t,
                  f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
                  f"n_collectives={sum(counts.values())}")
-        # beyond-paper: transposed-spectrum output (skip exchange #2) —
-        # the §Perf-A winning configuration, wall-clock ground truth
+        # beyond-paper: the PLANNED transposed output layout (skip exchange
+        # #2) — the §Perf-A winning configuration, now an NdPlan field
+        # instead of a 2D-only executor flag; wall-clock ground truth
         nd = api.plan_nd((n, n), "r2c", mesh=mesh, comm="collective",
-                         planner=planner, decomp="slab", axes=("fft",))
+                         planner=planner, decomp="slab", axes=("fft",),
+                         output_layout="transposed")
         fn_kt = jax.jit(lambda a, _p=nd: api.execute_nd(
-            _p, a, mesh=mesh, planner=planner, keep_transposed=True))
+            _p, a, mesh=mesh, planner=planner))
         t_kt = time_fn(fn_kt, xs)
         _, counts, wire = parse_collectives(
             fn_kt.lower(xs).compile().as_text(), with_wire=True)
         wb = sum(wire.values())
-        emit(f"fig6/keep_transposed/n{n}", t_kt,
+        emit(f"fig6/transposed_layout/n{n}", t_kt,
              f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
              f"n_collectives={sum(counts.values())}")
+
+    # distributed 1D (factor split): the gather-local alternative moves the
+    # whole array through one link; the factor split moves 3 x 1/p of it
+    n1d = 1 << 20
+    nd1 = api.plan_nd((n1d,), "c2c", mesh=mesh, comm="collective",
+                      planner=planner, decomp="factor1d", axes=("fft",))
+    pair1 = tuple(
+        jax.device_put(rng.standard_normal((n1d,)).astype(np.float32),
+                       NamedSharding(mesh, P("fft"))) for _ in range(2))
+    fn1 = jax.jit(lambda a, b, _p=nd1: api.execute_nd(
+        _p, (a, b), mesh=mesh, planner=planner))
+    t1 = time_fn(fn1, *pair1)
+    _, counts, wire = parse_collectives(
+        fn1.lower(*pair1).compile().as_text(), with_wire=True)
+    emit(f"fig6/factor1d/n{n1d}", t1,
+         f"wire_bytes_per_dev={sum(wire.values()):.0f};"
+         f"n_collectives={sum(counts.values())};"
+         f"factors={nd1.factors[0]}x{nd1.factors[1]}")
 
     # pencil decomposition (P3DFFT-style) x comm backend on a 4x2 mesh:
     # same exchange layer, but collectives stay inside row/column
@@ -124,6 +147,27 @@ def _worker() -> None:
         emit(f"fig6/pencil_{tag}/x{nx}y{ny}z{nz}", t,
              f"wire_bytes_per_dev={wb:.0f};rel_wire={wb / base:.2f};"
              f"n_collectives={sum(counts.values())}")
+    # 4D multi-axis pencil: the k=3 exchange chain on a 2x2x2 mesh (one
+    # exchange per adjacent pair of sharded axes, each inside its own
+    # plane communicator)
+    mesh3 = jax.make_mesh((2, 2, 2), ("ma", "mb", "mc"))
+    shape4 = (16, 16, 32, 32)
+    pair4 = tuple(
+        jax.device_put(rng.standard_normal(shape4).astype(np.float32),
+                       NamedSharding(mesh3, P("ma", "mb", "mc", None)))
+        for _ in range(2))
+    nd4 = api.plan_nd(shape4, "c2c", mesh=mesh3, comm="collective",
+                      planner=planner, decomp="pencil",
+                      axes=("ma", "mb", "mc"))
+    fn4 = jax.jit(lambda a, b, _p=nd4: api.execute_nd(
+        _p, (a, b), mesh=mesh3, planner=planner))
+    t4 = time_fn(fn4, *pair4)
+    _, counts, wire = parse_collectives(
+        fn4.lower(*pair4).compile().as_text(), with_wire=True)
+    emit(f"fig6/pencil4d_k3/{'x'.join(str(s) for s in shape4)}", t4,
+         f"wire_bytes_per_dev={sum(wire.values()):.0f};"
+         f"n_collectives={sum(counts.values())}")
+
     # r2c pencil (padded half spectrum) with the planned backend choice
     xr = jax.device_put(
         rng.standard_normal((nx, ny, nz)).astype(np.float32),

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI benchmark subset + regression gate (see benchmarks/README.md).
+#
+#   scripts/bench_ci.sh                    # run, emit BENCH_ci.json, gate
+#                                          # against benchmarks/baseline_ci.json
+#   scripts/bench_ci.sh --write-baseline   # refresh the committed baseline
+#   BENCH_SKIP_GATE=1 scripts/bench_ci.sh  # run + artifact, gate reports
+#                                          # but never fails (override label)
+#
+# Extra flags pass through to benchmarks/bench_ci.py (--tolerance,
+# --inject-slowdown CASE:FACTOR for the gate-trip demonstration, ...).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.bench_ci \
+    --out BENCH_ci.json --baseline benchmarks/baseline_ci.json "$@"

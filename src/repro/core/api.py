@@ -11,12 +11,23 @@ conveniences that execute it.
 
 Decompositions scored (both of the paper's planning modes):
 
-* **local**  — single-device planned execution (no mesh, or the exchange
+* **local**    — single-device planned execution (no mesh, or the exchange
   cost outweighs the speedup; on a mesh the model charges one gather).
-* **slab**   — 1D decomposition over one mesh axis (ndim >= 2), including
+* **slab**     — 1D decomposition over one mesh axis (ndim >= 2), including
   which mesh axis (assignment matters: it sets the padding).
-* **pencil** — P3DFFT-style 2D decomposition (ndim == 3), over every
-  ordered mesh-axis pair.
+* **pencil**   — P3DFFT-style multi-axis decomposition (ndim >= 3), over
+  every ordered tuple of 2..ndim-1 mesh axes: the leading transform axes
+  are sharded and one exchange per adjacent pair walks the chain.
+* **factor1d** — distributed 1D c2c via the ``fft_conv`` factor-split
+  algorithm (the length-N signal viewed as an (n1, n2) matrix, three
+  exchanges), whenever ``repro.core.fftconv.factor_split`` finds a split.
+
+The planner also decides the OUTPUT LAYOUT: ``output_layout="transposed"``
+asks for the spectrum sharded over the last transform axis instead of the
+first, which lets the slab executor skip its second exchange entirely (and
+``ifftn`` invert the transposed spectrum with a single exchange, no
+re-shuffle).  Values stay at their natural numpy index positions either
+way — only the sharding differs — so ``NdPlan.crop`` is unchanged.
 
 ``mode="estimate"`` scores candidates with the roofline model extended from
 :mod:`repro.core.plan` / :mod:`repro.core.comm` (compute + HBM + wire bytes
@@ -36,6 +47,7 @@ the collective-padded layout, including mixed-radix mesh shapes).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -45,8 +57,10 @@ import numpy as np
 
 from . import algo, dfft
 from .comm import (_normalize_axis_specs, _time_callable, fac_sum,
-                   measure_comm_pencil, measure_comm_slab_nd, pad_to,
-                   plan_comm_pencil, plan_comm_slab_nd)
+                   measure_comm_factor1d, measure_comm_pencil_nd,
+                   measure_comm_slab_nd, pad_to, plan_comm_factor1d,
+                   plan_comm_pencil_nd, plan_comm_slab_nd)
+from .fftconv import factor_split
 from .plan import Planner, execute, execute_inverse
 
 Complex = algo.Complex
@@ -55,7 +69,8 @@ __all__ = ["NdPlan", "plan_nd", "execute_nd", "execute_nd_inverse",
            "fftn", "ifftn", "rfftn", "irfftn", "PLAN_ND_STATS",
            "COLLECTIVE_LAT"]
 
-DECOMPS = ("local", "slab", "pencil")
+DECOMPS = ("local", "slab", "pencil", "factor1d")
+OUTPUT_LAYOUTS = ("natural", "transposed")
 
 #: per-collective latency charge in the decomposition roofline (seconds).
 #: This is what makes small transforms stay local: two exchanges cost more
@@ -80,18 +95,23 @@ class NdPlan:
     leading axes are batch).  ``mesh_axes``/``mesh_shape`` name the mesh
     axes the decomposition uses, in decomposition order; ``comm`` holds one
     RESOLVED exchange spec per mesh axis (never ``"auto"``/``"measure"`` —
-    those are resolved at planning time).
+    those are resolved at planning time).  ``output_layout="transposed"``
+    leaves the spectrum sharded over the LAST transform axis (the slab
+    executor skips its restore exchange; values keep natural positions).
+    ``factors`` is the (n1, n2) split of the ``factor1d`` decomposition.
     """
 
     shape: Tuple[int, ...]
     kind: str                            # "c2c" | "r2c"
-    decomp: str                          # "local" | "slab" | "pencil"
+    decomp: str                          # one of DECOMPS
     mesh_axes: Tuple[str, ...] = ()
     mesh_shape: Tuple[int, ...] = ()
     comm: Tuple = ()
     mode: str = "estimate"
     est_cost: float = 0.0
     measured_cost: float = -1.0
+    output_layout: str = "natural"       # "natural" | "transposed"
+    factors: Tuple[int, ...] = ()        # factor1d: the (n1, n2) split
 
     # -- padded layout (the shared pad-and-crop convention) -----------------
 
@@ -111,11 +131,14 @@ class NdPlan:
             (p,) = self.mesh_shape
             return (pad_to(s[0], p),) + s[1:-1] + (pad_to(sp[-1], p),)
         if self.decomp == "pencil":
-            p0, p1 = self.mesh_shape
-            # Y is input-sharded over p1 and exchange-split over p0, so its
-            # padding must divide both communicators
-            return (pad_to(s[0], p0), pad_to(s[1], math.lcm(p0, p1)),
-                    pad_to(sp[-1], p1))
+            ps, k = self.mesh_shape, len(self.mesh_shape)
+            # axis j (0 < j < k) is input-sharded over p_j and
+            # exchange-split over p_{j-1}, so its padding must divide both
+            # communicators; unsharded middle axes stay unpadded
+            return ((pad_to(s[0], ps[0]),)
+                    + tuple(pad_to(s[j], math.lcm(ps[j - 1], ps[j]))
+                            for j in range(1, k))
+                    + s[k:-1] + (pad_to(sp[-1], ps[-1]),))
         return sp
 
     @property
@@ -157,7 +180,11 @@ def _estimate_nd(plan: NdPlan, hw, on_mesh: bool) -> float:
     padded = plan.padded_spectrum_shape
     elems = float(np.prod(padded))
     bytes_pair = elems * 8.0                       # (re, im) f32
-    flops = 8.0 * elems * sum(fac_sum(n) for n in plan.shape)
+    if plan.decomp == "factor1d":                  # two planned 1D stages
+        stage_macs = fac_sum(plan.factors[0]) + fac_sum(plan.factors[1])
+    else:
+        stage_macs = sum(fac_sum(n) for n in plan.shape)
+    flops = 8.0 * elems * stage_macs
     devices = max(int(np.prod(plan.mesh_shape or (1,))), 1)
     t_comp = max(flops / hw.flops,
                  (d + 1) * bytes_pair / hw.hbm_bw) / devices
@@ -168,7 +195,14 @@ def _estimate_nd(plan: NdPlan, hw, on_mesh: bool) -> float:
     elif plan.decomp == "slab":
         (p,) = plan.mesh_shape
         wire = (p - 1) / p * (bytes_pair / p)
-        t_comm = 2.0 * (wire / hw.link_bw + COLLECTIVE_LAT)
+        # a transposed output layout skips the restore exchange entirely
+        n_exchanges = 1.0 if plan.output_layout == "transposed" else 2.0
+        t_comm = n_exchanges * (wire / hw.link_bw + COLLECTIVE_LAT)
+    elif plan.decomp == "factor1d":
+        (p,) = plan.mesh_shape
+        wire = (p - 1) / p * (bytes_pair / p)
+        # stage A + stage B + the natural-order unpermute
+        t_comm = 3.0 * (wire / hw.link_bw + COLLECTIVE_LAT)
     else:                                          # pencil
         for p in plan.mesh_shape:
             if p <= 1:
@@ -197,21 +231,44 @@ def _mesh_axis_sizes(mesh, axes) -> "dict[str, int]":
     return sizes
 
 
-def _candidates(shape, kind, sizes) -> Sequence[Tuple[str, Tuple[str, ...]]]:
+def _candidates(shape, kind, sizes,
+                output_layout: str = "natural"
+                ) -> Sequence[Tuple[str, Tuple[str, ...]]]:
     """(decomp, mesh_axes) candidates the shape/mesh combination supports."""
     d = len(shape)
+    live = [a for a, p in sizes.items() if p > 1]
     cands = [("local", ())]
     if d >= 2:
-        cands += [("slab", (a,)) for a, p in sizes.items() if p > 1]
-    if d == 3:
-        cands += [("pencil", (a0, a1))
-                  for a0, p0 in sizes.items() for a1, p1 in sizes.items()
-                  if a0 != a1 and p0 > 1 and p1 > 1]
+        cands += [("slab", (a,)) for a in live]
+    if d >= 3:
+        # multi-axis pencil: every ordered tuple of 2..ndim-1 mesh axes
+        # (the k leading transform axes are sharded, one exchange per
+        # adjacent pair of the chain)
+        for k in range(2, min(d - 1, len(live)) + 1):
+            cands += [("pencil", axes)
+                      for axes in itertools.permutations(live, k)]
+    if d == 1 and kind == "c2c" and output_layout == "natural":
+        # distributed 1D through the fft_conv factor split (three
+        # exchanges; output is natural-order, so no transposed layout)
+        cands += [("factor1d", (a,)) for a in live
+                  if factor_split(shape[0], sizes[a]) is not None]
     return cands
 
 
+def _plan_factors(decomp: str, shape, mesh_axes, sizes) -> Tuple[int, ...]:
+    """The (n1, n2) split a ``factor1d`` candidate executes; () otherwise."""
+    if decomp != "factor1d":
+        return ()
+    split = factor_split(shape[0], sizes[mesh_axes[0]])
+    if split is None:
+        raise ValueError(
+            f"no factor split of n={shape[0]} over p={sizes[mesh_axes[0]]} "
+            "(need n divisible by p**2 with factorizable factors)")
+    return split
+
+
 def _resolve_comm(decomp, mesh_axes, shape, kind, comm, mesh, sizes,
-                  planner) -> Tuple:
+                  planner, factors=()) -> Tuple:
     """Turn the user's ``comm`` argument into one concrete spec per mesh
     axis.  ``"auto"`` entries go through the roofline planners,
     ``"measure"`` entries through the on-mesh autotuners (live mesh only);
@@ -221,26 +278,36 @@ def _resolve_comm(decomp, mesh_axes, shape, kind, comm, mesh, sizes,
         return ()
     live = mesh is not None and not isinstance(mesh, dict)
     specs = list(_normalize_axis_specs(comm, mesh_axes))
-    if decomp == "slab":
+    if decomp in ("slab", "factor1d"):
         (a,) = mesh_axes
         if specs[0] == "auto":
-            specs[0] = plan_comm_slab_nd(shape, sizes[a], hw=planner.hw,
-                                         kind=kind)
+            if decomp == "factor1d":
+                specs[0] = plan_comm_factor1d(shape[0], factors[0],
+                                              factors[1], sizes[a],
+                                              hw=planner.hw)
+            else:
+                specs[0] = plan_comm_slab_nd(shape, sizes[a], hw=planner.hw,
+                                             kind=kind)
         elif specs[0] == "measure":
             if not live:
                 raise ValueError('comm="measure" needs a live mesh')
-            specs[0] = measure_comm_slab_nd(shape, mesh, a, kind=kind,
-                                            wisdom=planner.wisdom)
+            if decomp == "factor1d":
+                specs[0] = measure_comm_factor1d(shape[0], tuple(factors),
+                                                 mesh, a,
+                                                 wisdom=planner.wisdom)
+            else:
+                specs[0] = measure_comm_slab_nd(shape, mesh, a, kind=kind,
+                                                wisdom=planner.wisdom)
         return tuple(specs)
     # pencil: plan/measure per mesh axis, only the axes that ask
     if "auto" in specs:
-        p0, p1 = sizes[mesh_axes[0]], sizes[mesh_axes[1]]
-        planned = plan_comm_pencil(shape, (p0, p1), hw=planner.hw, kind=kind)
+        ps = tuple(sizes[a] for a in mesh_axes)
+        planned = plan_comm_pencil_nd(shape, ps, hw=planner.hw, kind=kind)
         specs = [planned[i] if s == "auto" else s for i, s in enumerate(specs)]
     if "measure" in specs:
         if not live:
             raise ValueError('comm="measure" needs a live mesh')
-        measured = measure_comm_pencil(
+        measured = measure_comm_pencil_nd(
             tuple(shape), mesh, mesh_axes, kind=kind, wisdom=planner.wisdom,
             which=tuple(s == "measure" for s in specs))
         specs = [measured[i] if s == "measure" else s
@@ -270,7 +337,8 @@ def _comm_tag(comm) -> Optional[str]:
 def plan_nd(shape: Sequence[int], kind: str = "c2c", mesh=None,
             axes: Optional[Sequence[str]] = None, mode: str = "estimate",
             comm="auto", planner: Optional[Planner] = None,
-            decomp: Optional[str] = None) -> NdPlan:
+            decomp: Optional[str] = None,
+            output_layout: str = "natural") -> NdPlan:
     """Plan one N-D transform: pick the decomposition, the mesh-axis
     assignment, and the exchange backends; return the :class:`NdPlan`.
 
@@ -286,30 +354,53 @@ def plan_nd(shape: Sequence[int], kind: str = "c2c", mesh=None,
     historical entry points accepted — a backend name/instance,
     ``"auto"``, ``"measure"``, or a per-mesh-axis collection for pencil.
 
+    ``output_layout="transposed"`` plans for a spectrum sharded over the
+    last transform axis (slab saves its restore exchange; the same plan
+    passed to ``ifftn`` inverts the transposed spectrum without a
+    re-shuffle).  Values keep their natural numpy positions either way.
+
     ``decomp`` forces a decomposition (the deprecated shims use this); the
-    verdict of a free choice is cached under a ``dfft/*`` wisdom key.
+    verdict of a free choice is cached under a ``dfft/v2/*`` wisdom key
+    (pre-bump ``dfft/*`` entries are migrated on first lookup).
     """
     shape = tuple(int(n) for n in shape)
     assert kind in ("c2c", "r2c"), kind
     assert mode in ("estimate", "measured"), mode
+    assert output_layout in OUTPUT_LAYOUTS, output_layout
     planner = planner or Planner(backends=("jnp",))
     sizes = _mesh_axis_sizes(mesh, axes)
     live = mesh is not None and not isinstance(mesh, dict)
 
     def build(dec, mesh_axes, est=0.0, measured=-1.0, comm_arg=None):
+        factors = _plan_factors(dec, shape, mesh_axes, sizes)
         return NdPlan(
             shape, kind, dec, tuple(mesh_axes),
             tuple(sizes[a] for a in mesh_axes),
             _resolve_comm(dec, tuple(mesh_axes), shape, kind,
                           comm if comm_arg is None else comm_arg, mesh,
-                          sizes, planner),
-            mode, est, measured)
+                          sizes, planner, factors=factors),
+            mode, est, measured, output_layout, factors)
 
     if decomp is not None:              # forced (shims, benchmarks)
         assert decomp in DECOMPS, decomp
-        mesh_axes = () if decomp == "local" else tuple(
-            axes if axes is not None else
-            list(sizes)[: (1 if decomp == "slab" else 2)])
+        if decomp == "factor1d" and output_layout == "transposed":
+            raise ValueError("factor1d output is natural-order only")
+        if decomp == "slab" and len(shape) < 2:
+            raise ValueError("slab decomposition needs ndim >= 2")
+        if decomp == "factor1d" and (len(shape) != 1 or kind != "c2c"):
+            raise ValueError("factor1d is the 1D c2c decomposition")
+        if decomp == "local":
+            mesh_axes = ()
+        elif axes is not None:
+            mesh_axes = tuple(axes)
+        else:
+            width = 1 if decomp in ("slab", "factor1d") else \
+                min(len(sizes), len(shape) - 1)
+            mesh_axes = tuple(list(sizes)[:width])
+        if decomp == "pencil" and not 2 <= len(mesh_axes) <= len(shape) - 1:
+            raise ValueError(
+                f"pencil needs 2..ndim-1 mesh axes, got {mesh_axes} for "
+                f"ndim={len(shape)}")
         nd = build(decomp, mesh_axes)
         return dataclasses.replace(
             nd, est_cost=_estimate_nd(nd, planner.hw, on_mesh=bool(sizes)))
@@ -318,19 +409,29 @@ def plan_nd(shape: Sequence[int], kind: str = "c2c", mesh=None,
     tag = _comm_tag(comm)
     if tag is not None:
         mesh_tag = ".".join(f"{a}{p}" for a, p in sizes.items()) or "none"
-        key = (f"dfft/{'x'.join(str(n) for n in shape)}/{kind}/"
-               f"{mesh_tag}/{mode}/{tag}")
+        key = (f"dfft/v2/{'x'.join(str(n) for n in shape)}/{kind}/"
+               f"{mesh_tag}/{mode}/{tag}/{output_layout}")
         hit = planner.wisdom.get(key)
+        if hit is not None and not _valid_verdict(hit):
+            # corrupt v2 record: re-plan (the fresh verdict overwrites it)
+            hit = None
+        if hit is None and output_layout == "natural":
+            hit = _migrate_v1_verdict(planner, shape, kind, mesh_tag, mode,
+                                      tag, key)
         if hit is not None:
             return NdPlan(shape, kind, hit["decomp"],
                           tuple(hit["mesh_axes"]), tuple(hit["mesh_shape"]),
                           tuple(hit["comm"]), mode, hit.get("est", 0.0),
-                          hit.get("measured", -1.0))
+                          hit.get("measured", -1.0),
+                          hit.get("output_layout", "natural"),
+                          tuple(hit.get("factors", ())))
 
     scored = []
-    for dec, mesh_axes in _candidates(shape, kind, sizes):
+    for dec, mesh_axes in _candidates(shape, kind, sizes, output_layout):
         nd = NdPlan(shape, kind, dec, mesh_axes,
-                    tuple(sizes[a] for a in mesh_axes), (), mode)
+                    tuple(sizes[a] for a in mesh_axes), (), mode,
+                    output_layout=output_layout,
+                    factors=_plan_factors(dec, shape, mesh_axes, sizes))
         scored.append((_estimate_nd(nd, planner.hw, on_mesh=bool(sizes)),
                        nd))
     scored.sort(key=lambda t: t[0])
@@ -350,8 +451,45 @@ def plan_nd(shape: Sequence[int], kind: str = "c2c", mesh=None,
         planner.wisdom.put(key, {
             "decomp": best.decomp, "mesh_axes": list(best.mesh_axes),
             "mesh_shape": list(best.mesh_shape), "comm": list(best.comm),
-            "est": best.est_cost, "measured": best.measured_cost})
+            "est": best.est_cost, "measured": best.measured_cost,
+            "output_layout": best.output_layout,
+            "factors": list(best.factors)})
     return best
+
+
+def _valid_verdict(rec) -> bool:
+    """A ``dfft/*`` wisdom record trustworthy enough to reconstruct a plan
+    from (truncated/hand-edited records fall through to re-planning — the
+    store is a cache, never ground truth)."""
+    return (isinstance(rec, dict)
+            and rec.get("decomp") in DECOMPS
+            and all(isinstance(rec.get(f), list)
+                    for f in ("mesh_axes", "mesh_shape", "comm"))
+            and (rec["decomp"] != "factor1d"
+                 or len(rec.get("factors") or ()) == 2))
+
+
+def _migrate_v1_verdict(planner, shape, kind, mesh_tag, mode, tag,
+                        v2_key) -> Optional[dict]:
+    """Adopt a pre-bump ``dfft/*`` (v1) wisdom verdict for a natural-layout
+    lookup: the v1 schema had no ``output_layout``/``factors`` fields (and
+    no ``factor1d`` decomposition), so a v1 record is exactly a v2
+    natural-layout record with the new fields defaulted.  The migrated
+    record is re-written under the v2 key so the v1 entry is consulted at
+    most once per key."""
+    v1_key = (f"dfft/{'x'.join(str(n) for n in shape)}/{kind}/"
+              f"{mesh_tag}/{mode}/{tag}")
+    old = planner.wisdom.get(v1_key)
+    # the v1 schema predates factor1d, so a factor1d decomp marks the
+    # record as garbage rather than a migratable verdict
+    if (not _valid_verdict(old)
+            or old["decomp"] not in ("local", "slab", "pencil")):
+        return None        # corrupt/truncated v1 record: re-plan instead
+    rec = dict(old)
+    rec.setdefault("output_layout", "natural")
+    rec.setdefault("factors", [])
+    planner.wisdom.put(v2_key, rec)
+    return rec
 
 
 def _measure_finalists(scored, shape, kind, mesh, planner, build) -> NdPlan:
@@ -397,7 +535,10 @@ def execute_nd(plan: NdPlan, x, mesh=None, planner: Optional[Planner] = None,
     """Run ``plan`` forward.  ``x``: real array for r2c, (re, im) pair for
     c2c (leading batch dims welcome).  Returns the PADDED spectrum pair —
     crop with ``plan.crop`` / ``plan.crop_pair`` for the exact transform.
-    ``layout_opts`` (2D slab only): ``keep_transposed``, ``permuted_cols``.
+    The output layout follows ``plan.output_layout`` (transposed slab
+    plans skip the restore exchange); ``layout_opts`` are the LEGACY
+    2D-slab-only flags ``keep_transposed``/``permuted_cols`` the
+    deprecated shims still pass.
     """
     planner = planner or Planner(backends=("jnp",))
     if plan.decomp == "local":
@@ -406,6 +547,8 @@ def execute_nd(plan: NdPlan, x, mesh=None, planner: Optional[Planner] = None,
     if plan.decomp == "slab":
         return dfft.execute_slab(plan, x, mesh, planner, chunks=chunks,
                                  **layout_opts)
+    if plan.decomp == "factor1d":
+        return dfft.execute_factor1d(plan, x, mesh, planner, chunks=chunks)
     return dfft.execute_pencil(plan, x, mesh, planner, chunks=chunks)
 
 
@@ -422,6 +565,9 @@ def execute_nd_inverse(plan: NdPlan, c: Complex, mesh=None,
     if plan.decomp == "slab":
         return dfft.execute_slab_inverse(plan, c, mesh, planner,
                                          chunks=chunks, **layout_opts)
+    if plan.decomp == "factor1d":
+        return dfft.execute_factor1d_inverse(plan, c, mesh, planner,
+                                             chunks=chunks)
     return dfft.execute_pencil_inverse(plan, c, mesh, planner, chunks=chunks)
 
 
@@ -497,12 +643,15 @@ def _crop_spatial(y, plan: NdPlan, pair: bool):
 
 def fftn(x, mesh=None, axes=None, planner: Optional[Planner] = None,
          comm="auto", mode: str = "estimate", ndim: Optional[int] = None,
-         plan: Optional[NdPlan] = None, chunks: int = 4) -> Complex:
+         plan: Optional[NdPlan] = None, chunks: int = 4,
+         output_layout: str = "natural") -> Complex:
     """N-D c2c FFT matching ``numpy.fft.fftn`` over the trailing ``ndim``
     axes (default: all).  ``x``: complex array or (re, im) pair; leading
-    axes beyond ``ndim`` are batch.  Decomposition, mesh-axis assignment
-    and exchange backends come from :func:`plan_nd` (or pass ``plan=``).
-    Returns an (re, im) pair with the exact numpy shape."""
+    axes beyond ``ndim`` are batch.  Decomposition, mesh-axis assignment,
+    exchange backends and output layout come from :func:`plan_nd` (or pass
+    ``plan=``).  Returns an (re, im) pair with the exact numpy shape (with
+    ``output_layout="transposed"`` the values are identical but the
+    spectrum stays sharded over the last transform axis)."""
     if isinstance(mesh, int):   # legacy repro.core.fftn(pair, ndim) call
         import warnings
         warnings.warn(
@@ -514,21 +663,26 @@ def fftn(x, mesh=None, axes=None, planner: Optional[Planner] = None,
     c = _as_pair(x)
     d = _transform_ndim(c, ndim, plan)
     plan = plan or plan_nd(c[0].shape[c[0].ndim - d:], "c2c", mesh=mesh,
-                           axes=axes, mode=mode, comm=comm, planner=planner)
+                           axes=axes, mode=mode, comm=comm, planner=planner,
+                           output_layout=output_layout)
     out = execute_nd(plan, c, mesh=mesh, planner=planner, chunks=chunks)
     return plan.crop_pair(out)
 
 
 def ifftn(x, mesh=None, axes=None, planner: Optional[Planner] = None,
           comm="auto", mode: str = "estimate", ndim: Optional[int] = None,
-          plan: Optional[NdPlan] = None, chunks: int = 4) -> Complex:
+          plan: Optional[NdPlan] = None, chunks: int = 4,
+          output_layout: str = "natural") -> Complex:
     """Inverse of :func:`fftn` (matches ``numpy.fft.ifftn``).  Accepts the
     exact spectrum (array or pair); re-pads internally for the collective
-    layout."""
+    layout.  With a transposed plan (``plan.output_layout="transposed"``
+    or ``output_layout=`` here) the transposed spectrum inverts without a
+    re-shuffle: the slab inverse skips its first exchange."""
     c = _as_pair(x)
     d = _transform_ndim(c, ndim, plan)
     plan = plan or plan_nd(c[0].shape[c[0].ndim - d:], "c2c", mesh=mesh,
-                           axes=axes, mode=mode, comm=comm, planner=planner)
+                           axes=axes, mode=mode, comm=comm, planner=planner,
+                           output_layout=output_layout)
     c = _pad_spectrum(c, plan)
     y = execute_nd_inverse(plan, c, mesh=mesh, planner=planner,
                            chunks=chunks)
@@ -538,14 +692,16 @@ def ifftn(x, mesh=None, axes=None, planner: Optional[Planner] = None,
 def rfftn(x: jax.Array, mesh=None, axes=None,
           planner: Optional[Planner] = None, comm="auto",
           mode: str = "estimate", ndim: Optional[int] = None,
-          plan: Optional[NdPlan] = None, chunks: int = 4) -> Complex:
+          plan: Optional[NdPlan] = None, chunks: int = 4,
+          output_layout: str = "natural") -> Complex:
     """N-D r2c FFT matching ``numpy.fft.rfftn`` over the trailing ``ndim``
     axes of a real array (odd last-axis lengths included).  Returns the
     exact half-spectrum pair."""
     x = jnp.asarray(x)
     d = _transform_ndim(x, ndim, plan)
     plan = plan or plan_nd(x.shape[x.ndim - d:], "r2c", mesh=mesh,
-                           axes=axes, mode=mode, comm=comm, planner=planner)
+                           axes=axes, mode=mode, comm=comm, planner=planner,
+                           output_layout=output_layout)
     out = execute_nd(plan, x.astype(jnp.float32), mesh=mesh, planner=planner,
                      chunks=chunks)
     return plan.crop_pair(out)
@@ -554,7 +710,7 @@ def rfftn(x: jax.Array, mesh=None, axes=None,
 def irfftn(x, shape: Optional[Sequence[int]] = None, mesh=None, axes=None,
            planner: Optional[Planner] = None, comm="auto",
            mode: str = "estimate", plan: Optional[NdPlan] = None,
-           chunks: int = 4) -> jax.Array:
+           chunks: int = 4, output_layout: str = "natural") -> jax.Array:
     """Inverse of :func:`rfftn` back to a real array (matches
     ``numpy.fft.irfftn``).  ``shape`` is the spatial transform shape; when
     omitted the last axis is assumed even (``2 * (mh - 1)``), exactly
@@ -565,7 +721,8 @@ def irfftn(x, shape: Optional[Sequence[int]] = None, mesh=None, axes=None,
             shape = c[0].shape[:-1] + (2 * (c[0].shape[-1] - 1),)
         shape = tuple(int(n) for n in shape)
         plan = plan_nd(shape, "r2c", mesh=mesh, axes=axes, mode=mode,
-                       comm=comm, planner=planner)
+                       comm=comm, planner=planner,
+                       output_layout=output_layout)
     c = _pad_spectrum(c, plan)
     y = execute_nd_inverse(plan, c, mesh=mesh, planner=planner,
                            chunks=chunks)

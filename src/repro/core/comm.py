@@ -347,33 +347,34 @@ def fac_sum(n: int) -> float:
         return float(n)
 
 
-def plan_comm_pencil(shape: Tuple[int, int, int],
-                     mesh_shape: Tuple[int, int], hw=None,
-                     overlap_capable: bool = True,
-                     kind: str = "c2c") -> Tuple[str, str]:
-    """Choose per-axis comm backends for a pencil FFT on a (p0, p1) mesh.
+def plan_comm_pencil_nd(shape: Sequence[int], mesh_shape: Sequence[int],
+                        hw=None, overlap_capable: bool = True,
+                        kind: str = "c2c") -> Tuple[str, ...]:
+    """Choose per-mesh-axis comm backends for a k-axis pencil FFT of an
+    N-D transform (``k = len(mesh_shape)`` sharded leading axes, one
+    exchange per adjacent pair of the chain).
 
-    Unlike the 1D slab model, pencil exchanges run inside row/column
-    communicators: the Z<->Y exchange stays within the p1-sized row
-    communicator (mesh axis 1) and overlaps the Y-stage FFTs; the Y<->X
-    exchange stays within the p0-sized column communicator (mesh axis 0)
-    and overlaps the X-stage FFTs.  Each communicator is planned
-    independently against the stage it can hide behind:
+    Unlike the 1D slab model, pencil exchanges run inside row/column(/...)
+    communicators: exchange ``j`` stays within the ``p_j``-sized
+    communicator of mesh axis ``j`` and overlaps the FFT stage along
+    transform axis ``j``.  Each communicator is planned independently
+    against the stage it can hide behind:
 
-      wire_axis = (p_axis - 1)/p_axis * pencil_bytes
-      t_comp    = four-step matmul flops of that stage / hw.flops
+      wire_j = (p_j - 1)/p_j * pencil_bytes
+      t_comp = four-step matmul flops of stage j / hw.flops
 
-    Returns ``(backend_for_mesh_axis_0, backend_for_mesh_axis_1)``, the
-    order :func:`repro.core.dfft.fft3_pencil` consumes.
+    Returns one backend spec per mesh axis, in decomposition order (the
+    order :func:`repro.core.dfft.execute_pencil` consumes).
     """
     from .plan import TPU_V5E
     hw = hw or TPU_V5E
-    nx, ny, nz = shape
-    p0, p1 = mesh_shape
-    nz_eff = padded_half(nz, p1) if kind in ("r2c", "c2r") else nz
-    # the local pencil: an (re, im) f32 pair, constant across both exchanges
-    pencil_bytes = (nx / p0) * (ny / p1) * nz_eff * 8.0
-    elems = pencil_bytes / 8.0
+    mesh_shape = tuple(int(p) for p in mesh_shape)
+    nlast_eff = padded_half(shape[-1], mesh_shape[-1]) \
+        if kind in ("r2c", "c2r") else shape[-1]
+    # the local pencil: an (re, im) f32 pair, constant across every exchange
+    devices = float(np.prod(mesh_shape))
+    elems = float(np.prod(shape[:-1])) * nlast_eff / devices
+    pencil_bytes = elems * 8.0
 
     def choose(p: int, n_axis: int) -> str:
         if p <= 1:
@@ -382,8 +383,37 @@ def plan_comm_pencil(shape: Tuple[int, int, int],
         flops = 8.0 * elems * sum(algo.default_factorization(n_axis))
         return _roofline_choice(wire, flops, hw, overlap_capable)
 
-    # mesh axis 0's exchange feeds the X-stage; mesh axis 1's the Y-stage
-    return choose(p0, nx), choose(p1, ny)
+    # mesh axis j's exchange feeds the FFT stage along transform axis j
+    return tuple(choose(p, shape[j]) for j, p in enumerate(mesh_shape))
+
+
+def plan_comm_pencil(shape: Tuple[int, int, int],
+                     mesh_shape: Tuple[int, int], hw=None,
+                     overlap_capable: bool = True,
+                     kind: str = "c2c") -> Tuple[str, str]:
+    """The 3D/2-mesh-axis case of :func:`plan_comm_pencil_nd` (P3DFFT
+    layout: the Z<->Y exchange inside the p1-sized row communicator, the
+    Y<->X exchange inside the p0-sized column communicator)."""
+    s0, s1 = plan_comm_pencil_nd(shape, mesh_shape, hw=hw,
+                                 overlap_capable=overlap_capable, kind=kind)
+    return s0, s1
+
+
+def plan_comm_factor1d(n: int, n1: int, n2: int, p: int, hw=None,
+                       overlap_capable: bool = True) -> str:
+    """Choose the exchange backend for the distributed 1D factor-split FFT
+    (:func:`repro.core.dfft.execute_factor1d`): the length-``n`` signal is
+    viewed as an (n1, n2) matrix sharded over n1; each of the three
+    exchanges (stage A, stage B, un-permute) moves the local
+    ``(n1/p, n2)`` pair while a DFT stage computes."""
+    from .plan import TPU_V5E
+    hw = hw or TPU_V5E
+    if p <= 1:
+        return "collective"
+    elems = float(n) / p
+    wire = (p - 1) / p * elems * 8.0
+    flops = 8.0 * elems * (fac_sum(n1) + fac_sum(n2))
+    return _roofline_choice(wire, flops, hw, overlap_capable)
 
 
 def plan_comm_conv(bsz: int, d: int, n1: int, n2: int, p: int, hw=None,
@@ -634,42 +664,105 @@ def measure_comm_slab_nd(shape: Sequence[int], mesh, axis: str,
         chunk_candidates=chunk_candidates, reps=reps))
 
 
+def measure_comm_pencil_nd(shape: Sequence[int], mesh,
+                           axes: Sequence[str], kind: str = "c2c",
+                           wisdom: Optional[WisdomStore] = None,
+                           chunk_candidates: Sequence[int]
+                           = DEFAULT_CHUNK_SWEEP,
+                           reps: int = 3,
+                           which: Optional[Sequence[bool]] = None):
+    """Measured per-mesh-axis backend choice for a k-axis pencil FFT.
+
+    Each communicator's exchange is measured independently at its true
+    local shape in the execution chain (exchange ``j`` runs inside the
+    ``axes[j]`` communicator, immediately before the FFT stage along
+    transform axis ``j``).  Returns one spec per mesh axis, entries
+    ``None`` where ``which`` masks them off (so per-axis ``comm``
+    arguments can mix ``"measure"`` with explicit specs without paying
+    for both).  The 3D/2-axis keys coincide with the historical
+    :func:`measure_comm_pencil` keys.
+    """
+    d, k = len(shape), len(axes)
+    ps = tuple(int(mesh.shape[a]) for a in axes)
+    which = tuple(which) if which is not None else (True,) * k
+    # c2r retraces r2c's exchanges with byte-identical probes, so the
+    # inverse shares the forward's key (and any cached verdict) — same
+    # convention as measure_comm_slab
+    kind_key = "r2c" if kind in ("r2c", "c2r") else kind
+    base = (f"comm/pencil/{'x'.join(str(s) for s in shape)}/"
+            f"mesh{'x'.join(str(p) for p in ps)}/{kind_key}")
+    # padded axis sizes in the chain — taken from NdPlan itself (ONE
+    # definition of the pencil padding invariant), via a throwaway plan
+    from .api import NdPlan
+    padded = list(NdPlan(tuple(shape), kind_key, "pencil",
+                         tuple(axes), ps).padded_spectrum_shape)
+
+    def local_shape(j: int) -> Tuple[int, ...]:
+        """Local (re, im) block just before exchange j in the forward
+        chain: axes 0..j input-sharded, the donor axis full, axes past the
+        donor already exchanged onto their final communicator."""
+        out = []
+        donor = j + 1 if j < k - 1 else d - 1
+        for i in range(d):
+            if i <= j:
+                out.append(padded[i] // ps[i])
+            elif i == donor:
+                out.append(padded[i])
+            elif i < k:
+                out.append(padded[i] // ps[i - 1])
+            elif i == d - 1:
+                out.append(padded[i] // ps[k - 1])
+            else:
+                out.append(padded[i])
+        return tuple(out)
+
+    specs = [None] * k
+    for j in range(k - 1, -1, -1):          # execution order of the chain
+        if not which[j]:
+            continue
+        if ps[j] <= 1:
+            specs[j] = "collective"
+            continue
+        donor = j + 1 if j < k - 1 else d - 1
+        specs[j] = _measured_verdict(
+            f"{base}/ax{j}", wisdom,
+            lambda j=j, donor=donor: measure_comm(
+                mesh, axes[j], local_shape(j), split=donor, concat=j,
+                chunk_candidates=chunk_candidates, reps=reps))
+    return tuple(specs)
+
+
 def measure_comm_pencil(shape: Tuple[int, int, int], mesh,
                         axes: Sequence[str], kind: str = "c2c",
                         wisdom: Optional[WisdomStore] = None,
                         chunk_candidates: Sequence[int] = DEFAULT_CHUNK_SWEEP,
                         reps: int = 3,
                         which: Tuple[bool, bool] = (True, True)):
-    """Measured per-mesh-axis backend choice for a pencil FFT.
-
-    Each communicator's exchange is measured independently at its true
-    local shape: the Z<->Y exchange inside the row (``axes[1]``)
-    communicator, the Y<->X exchange inside the column (``axes[0]``)
-    communicator.  Returns ``(spec_for_axis0, spec_for_axis1)``, entries
-    ``None`` where ``which`` masks them off (so per-axis ``comm`` arguments
-    can mix ``"measure"`` with explicit specs without paying for both).
-    """
-    nx, ny, nz = shape
-    ax0, ax1 = axes
-    p0, p1 = mesh.shape[ax0], mesh.shape[ax1]
-    nz_eff = padded_half(nz, p1) if kind in ("r2c", "c2r") else nz
-    # c2r retraces r2c's exchanges with byte-identical probes, so the
-    # inverse shares the forward's key (and any cached verdict) — same
-    # convention as measure_comm_slab
-    kind_key = "r2c" if kind in ("r2c", "c2r") else kind
-    base = f"comm/pencil/{nx}x{ny}x{nz}/mesh{p0}x{p1}/{kind_key}"
-    s0 = s1 = None
-    if which[1]:
-        s1 = "collective" if p1 <= 1 else _measured_verdict(
-            f"{base}/ax1", wisdom, lambda: measure_comm(
-                mesh, ax1, (nx // p0, ny // p1, nz_eff), split=2, concat=1,
-                chunk_candidates=chunk_candidates, reps=reps))
-    if which[0]:
-        s0 = "collective" if p0 <= 1 else _measured_verdict(
-            f"{base}/ax0", wisdom, lambda: measure_comm(
-                mesh, ax0, (nx // p0, ny, nz_eff // p1), split=1, concat=0,
-                chunk_candidates=chunk_candidates, reps=reps))
+    """The 3D/2-mesh-axis case of :func:`measure_comm_pencil_nd` (kept for
+    the historical call sites; same wisdom keys)."""
+    s0, s1 = measure_comm_pencil_nd(
+        tuple(shape), mesh, tuple(axes), kind=kind, wisdom=wisdom,
+        chunk_candidates=chunk_candidates, reps=reps, which=which)
     return s0, s1
+
+
+def measure_comm_factor1d(n: int, factors: Tuple[int, int], mesh, axis: str,
+                          wisdom: Optional[WisdomStore] = None,
+                          chunk_candidates: Sequence[int]
+                          = DEFAULT_CHUNK_SWEEP,
+                          reps: int = 3) -> str:
+    """Measured backend choice for the distributed 1D factor-split FFT:
+    times the stage-A exchange of the local (n1/p, n2) block (all three of
+    the algorithm's exchanges move the same bytes through the same
+    communicator)."""
+    p = mesh.shape[axis]
+    if p <= 1:
+        return "collective"
+    n1, n2 = factors
+    key = f"comm/factor1d/{n}/{n1}x{n2}/p{p}"
+    return _measured_verdict(key, wisdom, lambda: measure_comm(
+        mesh, axis, (n1 // p, n2), split=1, concat=0,
+        chunk_candidates=chunk_candidates, reps=reps))
 
 
 def measure_comm_conv(bsz: int, d: int, n1: int, n2: int, mesh, axis: str,

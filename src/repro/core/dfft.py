@@ -1,7 +1,9 @@
 """Distributed multidimensional FFT on a device mesh (the paper's §3.2/§5.3).
 
-Slab decomposition over one mesh axis, pencil decomposition over two.  All
-data movement is EXPLICIT collectives inside ``shard_map`` — the paper's
+Slab decomposition over one mesh axis, pencil decomposition over an
+ordered chain of 2..ndim-1 mesh axes, and the factor-split distributed 1D
+transform.  All data movement is EXPLICIT collectives inside ``shard_map``
+— the paper's
 central design decision ("relying on the implicit communication HPX allows
 with AGAS does not make sense; instead we use the HPX equivalents of the MPI
 collective operations").
@@ -35,7 +37,10 @@ Algorithm (slab, 2D r2c, row-major N x M, P devices; paper's five steps):
   4. local c2c FFTs along (now contiguous) columns
   5. COMMUNICATE back + rearrange to original layout (N/P, Mh)
 
-Pencil decomposition (P3DFFT-style, 2D mesh) has full parity with slab.
+Pencil decomposition (P3DFFT-style, k mesh axes) has full parity with
+slab, and the ``factor1d`` executor distributes a single long axis via the
+``fft_conv`` factor split (three 1/P exchanges instead of one full
+gather).
 
 The historical shape-specific entry points — ``fft2_slab``/``ifft2_slab``
 and the four ``*_pencil`` functions — remain as thin DEPRECATED shims that
@@ -46,7 +51,7 @@ should go through :func:`repro.core.api.plan_nd` and the ``fftn`` family.
 from __future__ import annotations
 
 import warnings
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +74,7 @@ __all__ = [
     "rows_rfft", "rows_irfft", "hermitian_extend_last",
     "execute_slab", "execute_slab_inverse",
     "execute_pencil", "execute_pencil_inverse",
+    "execute_factor1d", "execute_factor1d_inverse",
     "fft2_slab", "ifft2_slab",
     "fft3_pencil", "ifft3_pencil", "rfft3_pencil", "irfft3_pencil",
     "distribute", "collect",
@@ -157,8 +163,20 @@ def _slab_backend(nd, chunks: int) -> CommBackend:
     return get_backend(nd.comm[0] if nd.comm else "collective", chunks=chunks)
 
 
-def _pencil_backends(nd, chunks: int) -> Tuple[CommBackend, CommBackend]:
+def _pencil_backends(nd, chunks: int) -> Tuple[CommBackend, ...]:
     return resolve_axis_backends(nd.comm, nd.mesh_axes, chunks=chunks)
+
+
+def _pencil_spectrum_spec(axs, k: int, d: int) -> P:
+    """The pencil SPECTRUM sharding (forward output == inverse input):
+    transform axis j+1 over mesh axis j for j < k-1, the last axis over
+    mesh axis k-1, everything else replicated.  One definition so the two
+    executors can never desynchronize."""
+    spec = [None] * d
+    for j in range(k - 1):
+        spec[j + 1] = axs[j]
+    spec[d - 1] = axs[k - 1]
+    return P(*spec)
 
 
 # ---------------------------------------------------------------------------
@@ -190,14 +208,23 @@ def execute_slab(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
     (global trailing shape ``nd.padded_spectrum_shape``), sharded over the
     first transform axis — crop with ``nd.crop`` for the exact transform.
 
-    ``keep_transposed`` / ``permuted_cols`` are the 2D-only layout
-    optimizations of the historical ``fft2_slab`` (skip the second exchange
-    / skip the column digit transpose).
+    A plan with ``output_layout="transposed"`` skips the second exchange
+    entirely: the values stay at their natural (numpy) index positions but
+    the output is sharded over the LAST axis instead of the first (any
+    ndim, mixed radix included) — ``execute_slab_inverse`` consumes that
+    layout with a single exchange, so a transposed round trip saves two.
+
+    ``keep_transposed`` / ``permuted_cols`` are the historical 2D-only
+    layout flags of ``fft2_slab`` (folded transposed layout / skip the
+    column digit transpose); new code plans the layout instead.
     """
     d = len(nd.shape)
     assert nd.decomp == "slab" and len(nd.mesh_axes) == 1
+    transposed_out = getattr(nd, "output_layout", "natural") == "transposed"
     if keep_transposed or permuted_cols:
         assert d == 2, "transposed/permuted layouts are 2D-only"
+        assert not transposed_out, \
+            "legacy keep_transposed flag on an already-transposed plan"
     ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
     pair_in = nd.kind == "c2c"
     xr = x[0] if pair_in else x
@@ -239,11 +266,17 @@ def execute_slab(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
         if keep_transposed:     # 2D: hand back the transposed local layout
             return jnp.swapaxes(y[0], i0, il), jnp.swapaxes(y[1], i0, il)
         y = _pad_axis(y, i0, n0p)
+        if transposed_out:      # planned layout: skip the second exchange
+            return y
         return backend.exchange(y, ax, split=i0, concat=il, p=p)
 
     spec_in = batched_spec(P(ax, *(None,) * (d - 1)), bnd)
-    spec_out = batched_spec(
-        P(None, ax) if keep_transposed else P(ax, *(None,) * (d - 1)), bnd)
+    if keep_transposed:
+        spec_out = batched_spec(P(None, ax), bnd)
+    elif transposed_out:
+        spec_out = batched_spec(P(*(None,) * (d - 1), ax), bnd)
+    else:
+        spec_out = batched_spec(P(ax, *(None,) * (d - 1)), bnd)
     in_specs = (spec_in, spec_in) if pair_in else (spec_in,)
     args = x if pair_in else (x,)
     return shard_map(local, mesh=mesh, in_specs=in_specs,
@@ -257,11 +290,19 @@ def execute_slab_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
     """Inverse slab transform: consumes the PADDED spectrum pair produced by
     :func:`execute_slab` (zero padded bands) and returns the spatial array —
     real for ``kind="r2c"``, a pair for ``"c2c"`` — with the first transform
-    axis still padded to ``pad_to(n0, p)`` (crop with ``nd.shape[0]``)."""
+    axis still padded to ``pad_to(n0, p)`` (crop with ``nd.shape[0]``).
+
+    A plan with ``output_layout="transposed"`` consumes the last-axis-
+    sharded layout :func:`execute_slab` produced for it and needs only ONE
+    exchange; the legacy 2D ``from_transposed`` flag consumes the
+    historical folded layout instead."""
     d = len(nd.shape)
     assert nd.decomp == "slab" and len(nd.mesh_axes) == 1
+    transposed_in = getattr(nd, "output_layout", "natural") == "transposed"
     if from_transposed or permuted_cols:
         assert d == 2, "transposed/permuted layouts are 2D-only"
+        assert not transposed_in, \
+            "legacy from_transposed flag on an already-transposed plan"
     ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
     bnd = c[0].ndim - d
     i0, il = bnd, bnd + d - 1
@@ -284,9 +325,15 @@ def execute_slab_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
     def local(cr: jax.Array, ci: jax.Array):
         z = (cr, ci)
         if from_transposed:
-            # first-axis inverse: in the transposed layout the axis is last
+            # first-axis inverse: in the folded layout the axis is last
             z = execute_inverse(col_plan, z)                # (lp/p, n0)
             z = (jnp.swapaxes(z[0], i0, il), jnp.swapaxes(z[1], i0, il))
+        elif transposed_in:
+            # planned transposed input is already in the post-exchange-1
+            # layout (first axis full, last sharded): no exchange needed
+            z = _crop_axis(z, i0, n0)
+            z = _fft_axis(col_plan, z, i0, inverse=True)
+            z = _pad_axis(z, i0, n0p)
         else:
             z = backend.exchange(z, ax, split=il, concat=i0, p=p)
             z = _crop_axis(z, i0, n0)
@@ -301,80 +348,94 @@ def execute_slab_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
         return rows_irfft(planner, z, nlast)                # c2r last axis
 
     spec_std = batched_spec(P(ax, *(None,) * (d - 1)), bnd)
-    spec_in = batched_spec(P(None, ax), bnd) if from_transposed else spec_std
+    if from_transposed:
+        spec_in = batched_spec(P(None, ax), bnd)
+    elif transposed_in:
+        spec_in = batched_spec(P(*(None,) * (d - 1), ax), bnd)
+    else:
+        spec_in = spec_std
     out_specs = spec_std if nd.kind == "r2c" else (spec_std, spec_std)
     return shard_map(local, mesh=mesh, in_specs=(spec_in, spec_in),
                      out_specs=out_specs)(c[0], c[1])
 
 
 # ---------------------------------------------------------------------------
-# pencil executor (P3DFFT-style, 2D mesh, ndim == 3, batch dims, mixed radix)
+# pencil executor (P3DFFT-style, k mesh axes, ndim >= k+1, batch dims,
+# mixed radix)
 # ---------------------------------------------------------------------------
 #
-# Layout convention (forward direction), mesh axes (ax0, ax1) = (p0, p1):
+# Layout convention (forward direction), mesh axes (a0..a_{k-1}) of sizes
+# (p0..p_{k-1}) sharding the FIRST k transform axes; 3D/2-axis shown:
 #
 #   input   (b..., Xp/p0, Yp/p1, Z)    Z-FFT local, pad Z -> Zp (or zh_pad)
-#   xchg 1  over ax1 (row communicator):   split Z, concat Y
+#   xchg 1  over a1 (row communicator):   split Z, concat Y
 #           (b..., Xp/p0, Yp, Zp/p1)   crop Y, Y-FFT local, re-pad
-#   xchg 2  over ax0 (column communicator): split Y, concat X
+#   xchg 2  over a0 (column communicator): split Y, concat X
 #           (b..., Xp,  Yp/p0, Zp/p1)  crop X, X-FFT local, re-pad
 #
-# Xp = pad_to(X, p0); Yp = pad_to(Y, lcm-multiple of both communicators);
-# Zp = pad_to(Z, p1) for c2c, padded_half(Z, p1) for r2c.  Communication
-# stays within row/column communicators — the P3DFFT advantage the paper
-# cites over slab decomposition.  The inverses retrace the same exchanges
-# backwards, so each mesh axis keeps its chosen comm backend both ways.
+# For k > 2 (ndim > 3) the chain continues axis by axis: one exchange per
+# adjacent pair of sharded axes, each inside its own communicator, the
+# just-transformed axis donating its locality to the next.  Axis paddings:
+# axis 0 -> pad_to(., p0); axis j (0 < j < k) -> pad_to(., lcm(p_{j-1},
+# p_j)) (input-sharded over p_j, exchange-split over p_{j-1}); non-sharded
+# middle axes unpadded; last axis pad_to(., p_{k-1}) (padded_half for r2c).
+# Communication stays within row/column(/plane) communicators — the P3DFFT
+# advantage the paper cites over slab decomposition.  The inverses retrace
+# the same exchanges backwards, so each mesh axis keeps its chosen comm
+# backend both ways.
 
 
 def execute_pencil(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
                    chunks: int = 4):
     """Forward pencil transform of an :class:`~repro.core.api.NdPlan`
     (``kind="c2c"``: (re, im) pair in, ``"r2c"``: real array in; any number
-    of leading batch dims).  Returns the PADDED spectrum pair, global
-    trailing shape ``nd.padded_spectrum_shape`` sharded
-    ``(None, ax0, ax1)`` — crop with ``nd.crop`` for the exact transform."""
-    assert nd.decomp == "pencil" and len(nd.mesh_axes) == 2
-    assert len(nd.shape) == 3, "pencil decomposition is 3D"
-    ax0, ax1 = nd.mesh_axes
-    p0, p1 = nd.mesh_shape
+    of leading batch dims).  The input's first ``k = len(nd.mesh_axes)``
+    transform axes are sharded over the mesh axes in order.  Returns the
+    PADDED spectrum pair, global trailing shape ``nd.padded_spectrum_shape``
+    sharded ``(None, a0, .., a_{k-2})`` on the leading axes and ``a_{k-1}``
+    on the last — crop with ``nd.crop`` for the exact transform."""
+    d = len(nd.shape)
+    k = len(nd.mesh_axes)
+    assert nd.decomp == "pencil" and 2 <= k <= d - 1, (nd.decomp, k, d)
+    axs, ps = nd.mesh_axes, nd.mesh_shape
     pair_in = nd.kind == "c2c"
     xr = x[0] if pair_in else x
-    bnd = xr.ndim - 3
-    ix, iy, iz = bnd, bnd + 1, bnd + 2
-    nx, ny, nz = nd.shape
-    xp, yp, zp = nd.padded_spectrum_shape   # (Xp, Yp, Zp-or-zh_pad)
-    b0, b1 = _pencil_backends(nd, chunks)
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-    plan_z = planner.plan(nz, kind="c2c") if pair_in else None
+    bnd = xr.ndim - d
+    il = bnd + d - 1
+    padded = nd.padded_spectrum_shape
+    backends = _pencil_backends(nd, chunks)
+    plans = [planner.plan(nd.shape[j], kind="c2c") for j in range(d - 1)]
+    plan_last = planner.plan(nd.shape[-1], kind="c2c") if pair_in else None
     if not pair_in:
-        _warm_rows_plan(planner, nz)
+        _warm_rows_plan(planner, nd.shape[-1])
 
     pads = [(0, 0)] * xr.ndim
-    pads[ix] = (0, xp - nx)
-    pads[iy] = (0, yp - ny)
-    if any(p != (0, 0) for p in pads):      # mixed radix: pad sharded axes
+    for j in range(k):                      # mixed radix: pad sharded axes
+        pads[bnd + j] = (0, padded[j] - nd.shape[j])
+    if any(p != (0, 0) for p in pads):
         x = ((jnp.pad(x[0], pads), jnp.pad(x[1], pads)) if pair_in
              else jnp.pad(x, pads))
 
     def local(*args):
         if pair_in:
-            z = execute(plan_z, args)                       # FFT along Z
-            z = _pad_axis(z, iz, zp)
+            z = execute(plan_last, args)                    # FFT last axis
         else:
-            z = rows_rfft(planner, args[0], nz)             # r2c along Z
-            z = _pad_axis(z, iz, zp)
-        z = b1.exchange(z, ax1, split=iz, concat=iy, p=p1)  # Y local
-        z = _crop_axis(z, iy, ny)
-        z = _fft_axis(plan_y, z, iy)                        # FFT along Y
-        z = _pad_axis(z, iy, yp)
-        z = b0.exchange(z, ax0, split=iy, concat=ix, p=p0)  # X local
-        z = _crop_axis(z, ix, nx)
-        z = _fft_axis(plan_x, z, ix)                        # FFT along X
-        return _pad_axis(z, ix, xp)
+            z = rows_rfft(planner, args[0], nd.shape[-1])   # r2c last axis
+        z = _pad_axis(z, il, padded[-1])
+        for j in range(k, d - 1):           # unsharded middle axes: local
+            z = _fft_axis(plans[j], z, bnd + j)
+        donor = il
+        for j in range(k - 1, -1, -1):      # the exchange chain
+            z = backends[j].exchange(z, axs[j], split=donor, concat=bnd + j,
+                                     p=ps[j])
+            z = _crop_axis(z, bnd + j, nd.shape[j])
+            z = _fft_axis(plans[j], z, bnd + j)             # FFT along j
+            z = _pad_axis(z, bnd + j, padded[j])
+            donor = bnd + j
+        return z
 
-    spec_in = batched_spec(P(ax0, ax1, None), bnd)
-    spec_out = batched_spec(P(None, ax0, ax1), bnd)
+    spec_in = batched_spec(P(*axs, *(None,) * (d - k)), bnd)
+    spec_out = batched_spec(_pencil_spectrum_spec(axs, k, d), bnd)
     in_specs = (spec_in, spec_in) if pair_in else (spec_in,)
     args = x if pair_in else (x,)
     return shard_map(local, mesh=mesh, in_specs=in_specs,
@@ -385,43 +446,165 @@ def execute_pencil_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
                            planner: Planner, *, chunks: int = 4):
     """Inverse pencil transform: PADDED spectrum pair in (zero padded
     bands), spatial data out — a pair for ``kind="c2c"``, a real array for
-    ``"r2c"`` — with X/Y still padded to their communicator multiples
-    (crop with ``nd.shape``)."""
-    assert nd.decomp == "pencil" and len(nd.mesh_axes) == 2
-    ax0, ax1 = nd.mesh_axes
-    p0, p1 = nd.mesh_shape
-    bnd = c[0].ndim - 3
-    ix, iy, iz = bnd, bnd + 1, bnd + 2
-    nx, ny, nz = nd.shape
-    xp, yp, zp = nd.padded_spectrum_shape
-    ztrue = nd.spectrum_shape[-1]           # zh for r2c, nz for c2c
-    b0, b1 = _pencil_backends(nd, chunks)
-    plan_y = planner.plan(ny, kind="c2c")
-    plan_x = planner.plan(nx, kind="c2c")
-    plan_z = planner.plan(nz, kind="c2c") if nd.kind == "c2c" else None
+    ``"r2c"`` — with the sharded axes still padded to their communicator
+    multiples (crop with ``nd.shape``)."""
+    d = len(nd.shape)
+    k = len(nd.mesh_axes)
+    assert nd.decomp == "pencil" and 2 <= k <= d - 1, (nd.decomp, k, d)
+    axs, ps = nd.mesh_axes, nd.mesh_shape
+    bnd = c[0].ndim - d
+    il = bnd + d - 1
+    padded = nd.padded_spectrum_shape
+    ltrue = nd.spectrum_shape[-1]           # half width for r2c
+    backends = _pencil_backends(nd, chunks)
+    plans = [planner.plan(nd.shape[j], kind="c2c") for j in range(d - 1)]
+    plan_last = planner.plan(nd.shape[-1], kind="c2c") \
+        if nd.kind == "c2c" else None
     if nd.kind == "r2c":
-        _warm_rows_plan(planner, nz, inverse=True)
+        _warm_rows_plan(planner, nd.shape[-1], inverse=True)
 
     def local(cr: jax.Array, ci: jax.Array):
-        z = (cr, ci)                                        # (Xp, Yp/p0, Zp/p1)
-        z = _crop_axis(z, ix, nx)
-        z = _fft_axis(plan_x, z, ix, inverse=True)          # inverse X
-        z = _pad_axis(z, ix, xp)
-        z = b0.exchange(z, ax0, split=ix, concat=iy, p=p0)  # (Xp/p0, Yp, ..)
-        z = _crop_axis(z, iy, ny)
-        z = _fft_axis(plan_y, z, iy, inverse=True)          # inverse Y
-        z = _pad_axis(z, iy, yp)
-        z = b1.exchange(z, ax1, split=iy, concat=iz, p=p1)  # (.., Yp/p1, Zp)
-        z = _crop_axis(z, iz, ztrue)                        # drop padding
+        z = (cr, ci)
+        for j in range(k):                  # retrace the chain backwards
+            z = _crop_axis(z, bnd + j, nd.shape[j])
+            z = _fft_axis(plans[j], z, bnd + j, inverse=True)
+            z = _pad_axis(z, bnd + j, padded[j])
+            donor = bnd + j + 1 if j < k - 1 else il
+            z = backends[j].exchange(z, axs[j], split=bnd + j, concat=donor,
+                                     p=ps[j])
+        z = _crop_axis(z, il, ltrue)                        # drop padding
+        for j in range(d - 2, k - 1, -1):   # unsharded middle axes
+            z = _fft_axis(plans[j], z, bnd + j, inverse=True)
         if nd.kind == "c2c":
-            return execute_inverse(plan_z, z)               # inverse Z
-        return rows_irfft(planner, z, nz)                   # c2r along Z
+            return execute_inverse(plan_last, z)            # inverse last
+        return rows_irfft(planner, z, nd.shape[-1])         # c2r last axis
 
-    spec_in = batched_spec(P(None, ax0, ax1), bnd)
-    spec_out = batched_spec(P(ax0, ax1, None), bnd)
+    spec_in = batched_spec(_pencil_spectrum_spec(axs, k, d), bnd)
+    spec_out = batched_spec(P(*axs, *(None,) * (d - k)), bnd)
     out_specs = spec_out if nd.kind == "r2c" else (spec_out, spec_out)
     return shard_map(local, mesh=mesh, in_specs=(spec_in, spec_in),
                      out_specs=out_specs)(c[0], c[1])
+
+
+# ---------------------------------------------------------------------------
+# factor1d executor (distributed 1D c2c via the fft_conv factor split)
+# ---------------------------------------------------------------------------
+#
+# The length-N signal is viewed as an (n1, n2) row-major matrix sharded
+# over n1 (nd.factors = (n1, n2), both divisible by p — see
+# repro.core.fftconv.factor_split).  The paper's own 2D framing of the
+# distributed 1D problem:
+#
+#   stage A: all_to_all -> columns local; DFT along n1; twiddle T[k1, n2]
+#   stage B: all_to_all -> rows local;    DFT along n2   => C[k1, k2]
+#   unpermute: all_to_all + local transpose => X[n1*k2 + k1], row-sharded
+#
+# Three exchanges each way.  fft_conv_seq_sharded keeps its own copy of
+# stages A/B *without* the unpermute (pointwise products commute with the
+# digit permutation, so the convolution skips both transposes); the planned
+# front-end needs numpy-exact natural order, hence the third exchange.
+
+
+def _factor1d_twiddle_block(n1: int, n2: int, axis_name: str, p: int,
+                            sign: int, chunk_axis: int) -> Complex:
+    """This device's block of ``T[k1, j2] = exp(sign*2*pi*i*k1*j2/(n1*n2))``,
+    computed in-graph from ``axis_index`` (O(N/p) per device) rather than
+    sliced out of a full O(N) host constant — at the large N where the
+    planner picks factor1d over gather-local, a replicated full twiddle
+    would cost as much memory as the gather the decomposition avoids.
+    ``chunk_axis=1``: all k1, this device's j2 columns (forward);
+    ``chunk_axis=0``: this device's k1 rows, all j2 (inverse)."""
+    me = jax.lax.axis_index(axis_name)
+    if chunk_axis == 1:
+        w = n2 // p
+        k1 = jax.lax.iota(jnp.float32, n1)[:, None]
+        j2 = (me * w + jax.lax.iota(jnp.int32, w)).astype(jnp.float32)[None]
+    else:
+        w = n1 // p
+        k1 = (me * w + jax.lax.iota(jnp.int32, w)) \
+            .astype(jnp.float32)[:, None]
+        j2 = jax.lax.iota(jnp.float32, n2)[None, :]
+    # k1*j2 < N stays exactly representable in f32 for any practical N
+    ang = (sign * 2.0 * np.pi / (n1 * n2)) * (k1 * j2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def execute_factor1d(nd, x, mesh: jax.sharding.Mesh, planner: Planner, *,
+                     chunks: int = 4) -> Complex:
+    """Forward distributed 1D c2c transform of an
+    :class:`~repro.core.api.NdPlan` with ``decomp="factor1d"`` ((re, im)
+    pair in, sharded over the transform axis; leading batch dims ride
+    through).  Returns the natural-order spectrum pair, still sharded over
+    the mesh axis."""
+    assert nd.decomp == "factor1d" and len(nd.mesh_axes) == 1
+    assert nd.kind == "c2c", "factor1d is c2c-only (r2c 1D stays local)"
+    ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
+    n1, n2 = nd.factors
+    assert n1 * n2 == nd.shape[0] and n1 % p == 0 and n2 % p == 0, nd
+    bnd = x[0].ndim - 1
+    backend = _slab_backend(nd, chunks)
+    plan1 = planner.plan(n1, kind="c2c")
+    plan2 = planner.plan(n2, kind="c2c")
+
+    def local(xr: jax.Array, xi: jax.Array):
+        shape = xr.shape[:-1] + (n1 // p, n2)
+        z = (xr.reshape(shape), xi.reshape(shape))
+        i1, i2 = z[0].ndim - 2, z[0].ndim - 1
+        # stage A: columns local
+        z = backend.exchange(z, ax, split=i2, concat=i1, p=p)  # (n1, n2/p)
+        z = _fft_axis(plan1, z, i1)                         # DFT along n1
+        z = algo.cmul(z, _factor1d_twiddle_block(n1, n2, ax, p, -1,
+                                                 chunk_axis=1))
+        # stage B: rows local
+        z = backend.exchange(z, ax, split=i1, concat=i2, p=p)  # (n1/p, n2)
+        z = _fft_axis(plan2, z, i2)                         # DFT along n2
+        # unpermute C[k1, k2] -> X[n1*k2 + k1] (natural order, row-sharded)
+        z = backend.exchange(z, ax, split=i2, concat=i1, p=p)  # (n1, n2/p)
+        z = (jnp.swapaxes(z[0], i1, i2), jnp.swapaxes(z[1], i1, i2))
+        flat = z[0].shape[:-2] + (n1 * n2 // p,)
+        return z[0].reshape(flat), z[1].reshape(flat)
+
+    spec = batched_spec(P(ax), bnd)
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec))(x[0], x[1])
+
+
+def execute_factor1d_inverse(nd, c: Complex, mesh: jax.sharding.Mesh,
+                             planner: Planner, *,
+                             chunks: int = 4) -> Complex:
+    """Inverse of :func:`execute_factor1d`: natural-order spectrum pair in,
+    spatial pair out (both sharded over the mesh axis)."""
+    assert nd.decomp == "factor1d" and len(nd.mesh_axes) == 1
+    ax, p = nd.mesh_axes[0], nd.mesh_shape[0]
+    n1, n2 = nd.factors
+    bnd = c[0].ndim - 1
+    backend = _slab_backend(nd, chunks)
+    plan1 = planner.plan(n1, kind="c2c")
+    plan2 = planner.plan(n2, kind="c2c")
+
+    def local(cr: jax.Array, ci: jax.Array):
+        shape = cr.shape[:-1] + (n2 // p, n1)
+        z = (cr.reshape(shape), ci.reshape(shape))
+        i1, i2 = z[0].ndim - 2, z[0].ndim - 1
+        # re-permute X[n1*k2 + k1] -> C[k1, k2] (rows local)
+        z = (jnp.swapaxes(z[0], i1, i2), jnp.swapaxes(z[1], i1, i2))
+        z = backend.exchange(z, ax, split=i1, concat=i2, p=p)  # (n1/p, n2)
+        # inverse DFT along k2 (normalized: 1/n2)
+        z = _fft_axis(plan2, z, i2, inverse=True)
+        # conjugate twiddle T[k1-block, n2]
+        z = algo.cmul(z, _factor1d_twiddle_block(n1, n2, ax, p, +1,
+                                                 chunk_axis=0))
+        # columns local; inverse DFT along k1 (normalized: 1/n1)
+        z = backend.exchange(z, ax, split=i2, concat=i1, p=p)  # (n1, n2/p)
+        z = _fft_axis(plan1, z, i1, inverse=True)
+        # back to the row-sharded natural layout
+        z = backend.exchange(z, ax, split=i1, concat=i2, p=p)  # (n1/p, n2)
+        flat = z[0].shape[:-2] + (n1 * n2 // p,)
+        return z[0].reshape(flat), z[1].reshape(flat)
+
+    spec = batched_spec(P(ax), bnd)
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec))(c[0], c[1])
 
 
 # ---------------------------------------------------------------------------

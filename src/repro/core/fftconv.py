@@ -52,6 +52,33 @@ def next_fft_len(n: int) -> int:
     return m
 
 
+def factor_split(n: int, p: int) -> Optional[Tuple[int, int]]:
+    """Factor a 1D transform length for the distributed factor-split FFT:
+    ``n = n1 * n2`` with both factors divisible by ``p`` (every exchange is
+    a tiled all_to_all over ``p`` participants) and as close to ``sqrt(n)``
+    as the divisors allow.  Returns ``None`` when no such split exists
+    (``n`` not a multiple of ``p**2``, or a factor would be an
+    unfactorizable prime) — the caller falls back to a local transform.
+
+    Shared by :func:`fft_conv_seq_sharded` and the ``factor1d``
+    decomposition of :func:`repro.core.api.plan_nd`.
+    """
+    if p < 1 or n % (p * p):
+        return None
+    r = n // (p * p)
+    best = None
+    for a in range(1, int(np.sqrt(r)) + 1):
+        if r % a == 0:
+            best = a                    # largest divisor <= sqrt(r)
+    n1, n2 = p * best, p * (r // best)
+    try:                                # both stages must be plannable
+        algo.default_factorization(n1)
+        algo.default_factorization(n2)
+    except ValueError:
+        return None
+    return n1, n2
+
+
 # ---------------------------------------------------------------------------
 # implicit filter parameterization (Hyena-lite): tiny param count at any L
 # ---------------------------------------------------------------------------
@@ -86,21 +113,21 @@ def fft_conv(u: jax.Array, k: jax.Array, planner: Optional[Planner] = None,
     Returns (B, L, D).  Uses c2c on the real signal (imag = 0) so the
     permuted-order transpose elision applies end to end.
     """
-    b, l, d = u.shape
-    nf = next_fft_len(2 * l)
+    b, slen, d = u.shape
+    nf = next_fft_len(2 * slen)
     planner = planner or Planner(backends=("jnp",))
     plan = planner.plan(nf, kind="c2c", permuted=permuted)
 
     ut = jnp.moveaxis(u, 1, 2).astype(jnp.float32)              # (B, D, L)
-    up = jnp.pad(ut, ((0, 0), (0, 0), (0, nf - l)))
-    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, nf - l)))
+    up = jnp.pad(ut, ((0, 0), (0, 0), (0, nf - slen)))
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, nf - slen)))
 
     from .plan import execute, execute_inverse
     uf = execute(plan, (up, jnp.zeros_like(up)))
     kf = execute(plan, (kp, jnp.zeros_like(kp)))
     prod = algo.cmul(uf, kf)
     y = execute_inverse(plan, prod)[0]                          # real part
-    return jnp.moveaxis(y[..., :l], 2, 1).astype(u.dtype)
+    return jnp.moveaxis(y[..., :slen], 2, 1).astype(u.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -203,16 +230,15 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
     backends on the live mesh (verdict cached in the planner's wisdom).
     """
     planner = planner or Planner(backends=("jnp",))
-    b, l, d = u.shape
+    b, slen, d = u.shape
     p = mesh.shape[axis]
-    nf = next_fft_len(2 * l)
-    # choose n1 divisible by p, both factors near sqrt(nf); n2 must also be
-    # divisible by p for the stage-A exchange
-    n1 = p
-    while n1 * n1 < nf:
-        n1 *= 2
-    n2 = nf // n1
-    assert n2 % p == 0, f"sequence too short for mesh: nf={nf}, p={p}"
+    nf = next_fft_len(2 * slen)
+    # both factors near sqrt(nf), each divisible by p (stage-A AND stage-B
+    # exchanges are tiled all_to_alls) — the same split the factor1d
+    # decomposition of plan_nd uses
+    split = factor_split(nf, p)
+    assert split is not None, f"sequence too short for mesh: nf={nf}, p={p}"
+    n1, n2 = split
     if comm == "auto":
         comm = plan_comm_conv(b, d, n1, n2, p, hw=planner.hw)
     elif comm == "measure":
@@ -222,8 +248,8 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
 
     # global zero-padding to the FFT length (outside shard_map: the tail
     # zeros live on the trailing devices of the sequence axis)
-    up = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, nf - l), (0, 0)))
-    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, nf - l)))
+    up = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, nf - slen), (0, 0)))
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, nf - slen)))
 
     def local(ul: jax.Array, kl: jax.Array) -> jax.Array:
         klt = kl.T[None]                                        # (1, nf/p, D)
@@ -242,4 +268,4 @@ def fft_conv_seq_sharded(u: jax.Array, k: jax.Array,
         in_specs=(batched_spec(P(axis, None), 1), batched_spec(P(axis), 1)),
         out_specs=batched_spec(P(axis, None), 1),
     )(up, kp)
-    return y[:, :l, :].astype(u.dtype)
+    return y[:, :slen, :].astype(u.dtype)

@@ -26,9 +26,8 @@ matching FFTW semantics where a plan is tied to the FFT length.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -200,7 +199,8 @@ class Planner:
     # -- N-D decomposition planning (the guru interface) ----------------------
 
     def plan_nd(self, shape, kind: str = "c2c", mesh=None, axes=None,
-                mode: Optional[str] = None, comm="auto", decomp=None):
+                mode: Optional[str] = None, comm="auto", decomp=None,
+                output_layout: str = "natural"):
         """Plan an N-D (possibly distributed) transform with THIS planner's
         hardware profile and wisdom store (delegates to
         :func:`repro.core.api.plan_nd`).  ``mode`` defaults to the
@@ -210,7 +210,8 @@ class Planner:
         if mode is None:
             mode = "measured" if self.mode == "measured" else "estimate"
         return plan_nd(shape, kind, mesh=mesh, axes=axes, mode=mode,
-                       comm=comm, planner=self, decomp=decomp)
+                       comm=comm, planner=self, decomp=decomp,
+                       output_layout=output_layout)
 
     # -- communication planning (paper §5.3: parcelport choice) ---------------
 

@@ -23,12 +23,8 @@ identical against numpy in tests.
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import algo
 from .plan import Plan, Planner

@@ -33,6 +33,11 @@ def mesh2():
     return jax.make_mesh((1, 1), ("mx", "my"))
 
 
+@pytest.fixture(scope="module")
+def mesh3():
+    return jax.make_mesh((1, 1, 1), ("ma", "mb", "mc"))
+
+
 # ---------------------------------------------------------------------------
 # decomposition planning (abstract meshes: pure roofline, no devices needed)
 # ---------------------------------------------------------------------------
@@ -75,9 +80,58 @@ def test_plan_nd_mesh_axis_assignment_minimizes_padding(planner):
         assert np.prod(a) <= np.prod(alt.padded_spectrum_shape), (nd, alt)
 
 
-def test_plan_nd_1d_stays_local(planner):
+def test_plan_nd_small_1d_stays_local(planner):
     nd = api.plan_nd((4096,), "c2c", mesh={"fft": 8}, planner=planner)
     assert nd.decomp == "local"
+
+
+def test_plan_nd_large_1d_picks_factor_split(planner):
+    """The distributed-1D factor-split candidate beats gather-local once
+    the gathered bytes dominate the three exchange latencies."""
+    nd = api.plan_nd((1 << 20,), "c2c", mesh={"fft": 8}, planner=planner)
+    assert nd.decomp == "factor1d" and nd.mesh_axes == ("fft",)
+    n1, n2 = nd.factors
+    assert n1 * n2 == 1 << 20 and n1 % 8 == 0 and n2 % 8 == 0
+    assert nd.est_cost < api.plan_nd((1 << 20,), "c2c", mesh={"fft": 8},
+                                     planner=planner,
+                                     decomp="local").est_cost
+
+
+def test_plan_nd_factor1d_infeasible_split_not_enumerated(planner):
+    # n not divisible by p**2: no factor split exists, local is the only
+    # distributed-1D option (and r2c 1D never enumerates factor1d)
+    assert ("factor1d", ("fft",)) not in api._candidates(
+        (1 << 20,), "c2c", {"fft": 7})
+    assert all(dec != "factor1d" for dec, _ in api._candidates(
+        (1 << 20,), "r2c", {"fft": 8}))
+
+
+def test_plan_nd_4d_enumerates_multi_axis_pencil(planner):
+    """ndim > 3 pencil: the candidate space holds ordered mesh-axis tuples
+    of every length 2..ndim-1 that the mesh supports."""
+    cands = api._candidates((8, 8, 8, 8), "c2c", {"ma": 2, "mb": 2, "mc": 2})
+    pencil = [axes for dec, axes in cands if dec == "pencil"]
+    assert (("ma", "mb") in pencil and ("mb", "ma") in pencil
+            and ("ma", "mb", "mc") in pencil)
+    assert all(2 <= len(a) <= 3 for a in pencil)
+    # 2-axis mesh, 4D shape: the pair candidates exist (ISSUE acceptance)
+    pencil2 = [axes for dec, axes in api._candidates(
+        (8, 8, 8, 8), "c2c", {"mx": 4, "my": 2}) if dec == "pencil"]
+    assert ("mx", "my") in pencil2 and ("my", "mx") in pencil2
+
+
+def test_ndplan_4d_pencil_padding_chain(planner):
+    """Axis j (0 < j < k) is input-sharded over p_j and exchange-split over
+    p_{j-1}: its padding must divide both communicators."""
+    nd = api.plan_nd((10, 6, 7, 9), "c2c", mesh={"ma": 4, "mb": 3, "mc": 2},
+                     planner=planner, decomp="pencil",
+                     axes=("ma", "mb", "mc"))
+    xp, yp, zp, wp = nd.padded_spectrum_shape
+    assert xp % 4 == 0                      # p0
+    assert yp % 4 == 0 and yp % 3 == 0      # lcm(p0, p1)
+    assert zp % 3 == 0 and zp % 2 == 0      # lcm(p1, p2)
+    assert wp % 2 == 0                      # p_{k-1}
+    assert nd.crop == tuple(slice(0, n) for n in (10, 6, 7, 9))
 
 
 # ---------------------------------------------------------------------------
@@ -124,11 +178,68 @@ def test_plan_nd_verdict_cached_in_wisdom(planner):
     keys = list(planner.wisdom.keys("dfft/"))
     assert len(keys) == before + 1
     rec = planner.wisdom.get(
-        "dfft/96x320/r2c/fft8/estimate/auto")
+        "dfft/v2/96x320/r2c/fft8/estimate/auto/natural")
     assert rec is not None and rec["decomp"] == nd.decomp
+    assert rec["output_layout"] == "natural" and rec["factors"] == []
     # a second call reconstructs the identical plan from the record
     nd2 = api.plan_nd((96, 320), "r2c", mesh={"fft": 8}, planner=planner)
     assert nd2 == nd
+    # the layout is part of the key: a transposed plan caches separately
+    ndt = api.plan_nd((96, 320), "r2c", mesh={"fft": 8}, planner=planner,
+                      output_layout="transposed")
+    assert ndt.output_layout == "transposed"
+    assert planner.wisdom.get(
+        "dfft/v2/96x320/r2c/fft8/estimate/auto/transposed") is not None
+
+
+def test_plan_nd_migrates_v1_wisdom_schema(planner):
+    """A pre-bump ``dfft/*`` record (no output_layout/factors fields) is
+    adopted for natural-layout lookups and re-written under the v2 key."""
+    v1_key = "dfft/70x130/r2c/fft8/estimate/auto"
+    v2_key = "dfft/v2/70x130/r2c/fft8/estimate/auto/natural"
+    planner.wisdom.put(v1_key, {
+        "decomp": "slab", "mesh_axes": ["fft"], "mesh_shape": [8],
+        "comm": ["collective"], "est": 2.5e-5, "measured": -1.0})
+    nd = api.plan_nd((70, 130), "r2c", mesh={"fft": 8}, planner=planner)
+    assert nd.decomp == "slab" and nd.comm == ("collective",)
+    assert nd.output_layout == "natural" and nd.factors == ()
+    assert nd.est_cost == 2.5e-5            # the v1 verdict, not a re-plan
+    migrated = planner.wisdom.get(v2_key)
+    assert migrated is not None and migrated["output_layout"] == "natural"
+    # transposed lookups never adopt a v1 (implicitly natural) verdict
+    ndt = api.plan_nd((70, 130), "r2c", mesh={"fft": 8}, planner=planner,
+                      output_layout="transposed")
+    assert ndt.output_layout == "transposed"
+
+
+def test_plan_nd_ignores_corrupt_v1_record(planner):
+    planner.wisdom.put("dfft/66x66/r2c/fft8/estimate/auto",
+                       {"decomp": "warp-drive"})
+    nd = api.plan_nd((66, 66), "r2c", mesh={"fft": 8}, planner=planner)
+    assert nd.decomp in api.DECOMPS        # re-planned, not adopted
+    # truncated v1 record (valid decomp, missing the list fields): also
+    # re-planned rather than crashing the hit-reconstruction path
+    planner.wisdom.put("dfft/68x68/r2c/fft8/estimate/auto",
+                       {"decomp": "slab"})
+    nd2 = api.plan_nd((68, 68), "r2c", mesh={"fft": 8}, planner=planner)
+    assert nd2.decomp in api.DECOMPS and len(nd2.comm) == len(nd2.mesh_axes)
+
+
+def test_plan_nd_heals_corrupt_v2_record(planner):
+    """A truncated v2 record re-plans instead of KeyError-ing, and the
+    fresh verdict overwrites the corruption."""
+    key = "dfft/v2/44x44/r2c/fft8/estimate/auto/natural"
+    planner.wisdom.put(key, {"decomp": "slab"})
+    nd = api.plan_nd((44, 44), "r2c", mesh={"fft": 8}, planner=planner)
+    assert nd.decomp in api.DECOMPS
+    healed = planner.wisdom.get(key)
+    assert isinstance(healed.get("mesh_axes"), list)    # overwritten
+    # a factor1d record without its (n1, n2) split is equally untrusted
+    key1 = "dfft/v2/1048576/c2c/fft8/estimate/auto/natural"
+    planner.wisdom.put(key1, {"decomp": "factor1d", "mesh_axes": ["fft"],
+                              "mesh_shape": [8], "comm": ["collective"]})
+    nd1 = api.plan_nd((1 << 20,), "c2c", mesh={"fft": 8}, planner=planner)
+    assert nd1.decomp != "factor1d" or len(nd1.factors) == 2
 
 
 def test_plan_nd_instance_comm_not_cached(planner):
@@ -177,15 +288,42 @@ def test_pencil_shim_matches_front_end(planner, mesh2):
     np.testing.assert_array_equal(np.asarray(old[1]), np.asarray(new[1]))
 
 
-def test_shims_warn_deprecation_once_per_process(planner, mesh1):
-    dfft._DEPRECATED_EMITTED.discard("fft2_slab")
-    x = RNG.standard_normal((8, 16)).astype(np.float32)
-    xs = jax.device_put(x, NamedSharding(mesh1, P("fft", None)))
-    with pytest.warns(DeprecationWarning, match="fft2_slab is deprecated"):
-        dfft.fft2_slab(xs, mesh1, "fft", planner)
+def _call_shim(name, planner, mesh1, mesh2):
+    """Invoke one deprecated entry point with minimal valid arguments."""
+    if name in ("fft2_slab", "ifft2_slab"):
+        x = RNG.standard_normal((8, 16)).astype(np.float32)
+        xs = jax.device_put(x, NamedSharding(mesh1, P("fft", None)))
+        if name == "fft2_slab":
+            return dfft.fft2_slab(xs, mesh1, "fft", planner)
+        c = (jax.numpy.zeros((8, 16)), jax.numpy.zeros((8, 16)))
+        return dfft.ifft2_slab(c, mesh1, "fft", 16, planner)
+    pair = (jax.numpy.zeros((4, 4, 8)), jax.numpy.zeros((4, 4, 8)))
+    if name == "fft3_pencil":
+        return dfft.fft3_pencil(pair, mesh2, ("mx", "my"), planner)
+    if name == "ifft3_pencil":
+        return dfft.ifft3_pencil(pair, mesh2, ("mx", "my"), planner)
+    if name == "rfft3_pencil":
+        return dfft.rfft3_pencil(jax.numpy.zeros((4, 4, 8)), mesh2,
+                                 ("mx", "my"), planner)
+    assert name == "irfft3_pencil"
+    c = (jax.numpy.zeros((4, 4, 5)), jax.numpy.zeros((4, 4, 5)))
+    return dfft.irfft3_pencil(c, mesh2, ("mx", "my"), 8, planner)
+
+
+@pytest.mark.parametrize("name", ["fft2_slab", "ifft2_slab", "fft3_pencil",
+                                  "ifft3_pencil", "rfft3_pencil",
+                                  "irfft3_pencil"])
+def test_every_shim_warns_deprecation_once_per_process(planner, mesh1,
+                                                       mesh2, name):
+    """The once-per-process DeprecationWarning contract, per entry point:
+    the FIRST call warns, every later call is silent."""
+    dfft._DEPRECATED_EMITTED.discard(name)
+    with pytest.warns(DeprecationWarning, match=f"{name} is deprecated"):
+        _call_shim(name, planner, mesh1, mesh2)
+    assert name in dfft._DEPRECATED_EMITTED
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
-        dfft.fft2_slab(xs, mesh1, "fft", planner)   # second call: silent
+        _call_shim(name, planner, mesh1, mesh2)     # second call: silent
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +347,109 @@ def test_fftn_matches_numpy_all_decomps(planner, mesh1, mesh2):
         br, bi = api.ifftn((re, im), mesh=mesh, plan=nd, planner=planner)
         assert np.max(np.abs((np.asarray(br) + 1j * np.asarray(bi)) - x)) \
             < 1e-3, decomp
+
+
+def test_fftn_4d_multi_axis_pencil(planner, mesh2, mesh3):
+    """ndim > 3 pencil on degenerate meshes: the k=2 and k=3 exchange
+    chains execute numpy-exactly (real 8-device runs in _dist_worker)."""
+    x = (RNG.standard_normal((2, 4, 6, 5, 8))
+         + 1j * RNG.standard_normal((2, 4, 6, 5, 8))).astype(np.complex64)
+    ref = np.fft.fftn(x, axes=(-4, -3, -2, -1))
+    for mesh, axes in ((mesh2, ("mx", "my")), (mesh3, ("ma", "mb", "mc"))):
+        nd = api.plan_nd((4, 6, 5, 8), "c2c", mesh=mesh, planner=planner,
+                         decomp="pencil", axes=axes)
+        assert len(nd.mesh_axes) == len(axes)
+        re, im = api.fftn(x, mesh=mesh, plan=nd, planner=planner, ndim=4)
+        got = np.asarray(re) + 1j * np.asarray(im)
+        assert got.shape == ref.shape
+        err = np.max(np.abs(got - ref)) / np.max(np.abs(ref))
+        assert err < 1e-4, axes
+        br, bi = api.ifftn((re, im), mesh=mesh, plan=nd, planner=planner,
+                           ndim=4)
+        back = np.asarray(br) + 1j * np.asarray(bi)
+        assert np.max(np.abs(back - x)) < 1e-3, axes
+
+
+def test_rfftn_4d_pencil(planner, mesh3):
+    x = RNG.standard_normal((4, 6, 5, 12)).astype(np.float32)
+    nd = api.plan_nd((4, 6, 5, 12), "r2c", mesh=mesh3, planner=planner,
+                     decomp="pencil", axes=("ma", "mb", "mc"))
+    re, im = api.rfftn(x, mesh=mesh3, plan=nd, planner=planner)
+    ref = np.fft.rfftn(x)
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert got.shape == ref.shape
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-4
+    back = api.irfftn((re, im), shape=(4, 6, 5, 12), mesh=mesh3, plan=nd,
+                      planner=planner)
+    assert np.max(np.abs(np.asarray(back) - x)) < 1e-3
+
+
+def test_fftn_factor1d_degenerate_mesh(planner, mesh1):
+    """The factor-split executor's plumbing on a 1-device mesh (identity
+    exchanges); the real 8-device run lives in _dist_worker."""
+    n = 64
+    x = (RNG.standard_normal((3, n))
+         + 1j * RNG.standard_normal((3, n))).astype(np.complex64)
+    nd = api.plan_nd((n,), "c2c", mesh=mesh1, planner=planner,
+                     decomp="factor1d", axes=("fft",))
+    assert nd.factors and nd.factors[0] * nd.factors[1] == n
+    re, im = api.fftn(x, mesh=mesh1, plan=nd, planner=planner, ndim=1)
+    ref = np.fft.fft(x, axis=-1)
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-4
+    br, bi = api.ifftn((re, im), mesh=mesh1, plan=nd, planner=planner,
+                       ndim=1)
+    back = np.asarray(br) + 1j * np.asarray(bi)
+    assert np.max(np.abs(back - x)) < 1e-3
+
+
+def test_transposed_layout_planned_and_round_trips(planner, mesh1):
+    """Planned keep_transposed: scored as a saved exchange, executed
+    without the restore shuffle, inverted by ifftn/irfftn from the
+    transposed layout — mixed radix included (the historical 2D-only flag
+    required divisibility; the planned layout does not)."""
+    nat = api.plan_nd((1024, 1024), "r2c", mesh={"fft": 8}, planner=planner,
+                      decomp="slab")
+    tra = api.plan_nd((1024, 1024), "r2c", mesh={"fft": 8}, planner=planner,
+                      decomp="slab", output_layout="transposed")
+    assert tra.est_cost < nat.est_cost      # one exchange instead of two
+    # mixed radix r2c round trip (10 rows on an 8-way axis would have been
+    # rejected by the legacy keep_transposed flag)
+    x = RNG.standard_normal((10, 12)).astype(np.float32)
+    nd = api.plan_nd((10, 12), "r2c", mesh=mesh1, planner=planner,
+                     decomp="slab", axes=("fft",),
+                     output_layout="transposed")
+    re, im = api.rfftn(x, mesh=mesh1, plan=nd, planner=planner)
+    ref = np.fft.rfftn(x)
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert got.shape == ref.shape
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-4
+    back = api.irfftn((re, im), shape=(10, 12), mesh=mesh1, plan=nd,
+                      planner=planner)
+    assert np.max(np.abs(np.asarray(back) - x)) < 1e-3
+    # 3D c2c batched through the same planned layout
+    x3 = (RNG.standard_normal((2, 6, 5, 9))
+          + 1j * RNG.standard_normal((2, 6, 5, 9))).astype(np.complex64)
+    nd3 = api.plan_nd((6, 5, 9), "c2c", mesh=mesh1, planner=planner,
+                      decomp="slab", axes=("fft",),
+                      output_layout="transposed")
+    re3, im3 = api.fftn(x3, mesh=mesh1, plan=nd3, planner=planner, ndim=3)
+    ref3 = np.fft.fftn(x3, axes=(-3, -2, -1))
+    got3 = np.asarray(re3) + 1j * np.asarray(im3)
+    assert np.max(np.abs(got3 - ref3)) / np.max(np.abs(ref3)) < 1e-4
+    b3 = api.ifftn((re3, im3), mesh=mesh1, plan=nd3, planner=planner,
+                   ndim=3)
+    back3 = np.asarray(b3[0]) + 1j * np.asarray(b3[1])
+    assert np.max(np.abs(back3 - x3)) < 1e-3
+
+
+def test_transposed_layout_forbids_factor1d(planner):
+    with pytest.raises(ValueError, match="natural-order"):
+        api.plan_nd((1 << 20,), "c2c", mesh={"fft": 8}, planner=planner,
+                    decomp="factor1d", output_layout="transposed")
+    nd = api.plan_nd((1 << 20,), "c2c", mesh={"fft": 8}, planner=planner,
+                     output_layout="transposed")
+    assert nd.decomp != "factor1d"          # excluded from the free choice
 
 
 def test_rfftn_odd_and_batched(planner, mesh1):

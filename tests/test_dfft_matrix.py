@@ -181,6 +181,7 @@ FFTN_SHAPES = [
     ((10, 7), ()),            # non-divisible rows, odd/prime columns
     ((6, 10, 9), (2,)),       # batched 3D, nothing divides a 4x2 mesh
     ((5, 12), (2, 3)),        # two leading batch dims
+    ((4, 6, 5, 8), (2,)),     # batched 4D: the multi-axis pencil chain
 ]
 
 
@@ -195,8 +196,8 @@ def _decomp_args(decomp, mesh1, mesh2):
 @pytest.mark.parametrize("shape,batch", FFTN_SHAPES)
 @pytest.mark.parametrize("decomp", ["local", "slab", "pencil"])
 def test_fftn_matrix(planner, mesh1, mesh2, decomp, shape, batch):
-    if decomp == "pencil" and len(shape) != 3:
-        pytest.skip("pencil decomposition is 3D")
+    if decomp == "pencil" and len(shape) < 3:
+        pytest.skip("pencil decomposition needs ndim >= 3")
     if decomp == "slab" and len(shape) < 2:
         pytest.skip("slab decomposition needs ndim >= 2")
     mesh, axes = _decomp_args(decomp, mesh1, mesh2)
@@ -220,8 +221,8 @@ def test_fftn_matrix(planner, mesh1, mesh2, decomp, shape, batch):
 @pytest.mark.parametrize("shape,batch", FFTN_SHAPES)
 @pytest.mark.parametrize("decomp", ["local", "slab", "pencil"])
 def test_rfftn_matrix(planner, mesh1, mesh2, decomp, shape, batch):
-    if decomp == "pencil" and len(shape) != 3:
-        pytest.skip("pencil decomposition is 3D")
+    if decomp == "pencil" and len(shape) < 3:
+        pytest.skip("pencil decomposition needs ndim >= 3")
     mesh, axes = _decomp_args(decomp, mesh1, mesh2)
     x = RNG.standard_normal(batch + shape).astype(np.float32)
     nd = api.plan_nd(shape, "r2c", mesh=mesh, planner=planner,
@@ -236,3 +237,52 @@ def test_rfftn_matrix(planner, mesh1, mesh2, decomp, shape, batch):
                       planner=planner)
     assert back.shape == x.shape
     assert np.max(np.abs(np.asarray(back) - x)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# factor1d (distributed 1D factor split) and planned transposed layouts:
+# every comm spec shape through the degenerate mesh, like the rows above
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", COMM_SPECS)
+def test_factor1d_matrix(planner, mesh1, spec):
+    n = 64
+    x = (RNG.standard_normal((2, n))
+         + 1j * RNG.standard_normal((2, n))).astype(np.complex64)
+    nd = api.plan_nd((n,), "c2c", mesh=mesh1, planner=planner,
+                     decomp="factor1d", axes=("fft",), comm=spec)
+    assert nd.factors and nd.factors[0] * nd.factors[1] == n
+    assert all(s not in ("auto", "measure") for s in nd.comm)
+    re, im = api.fftn(x, mesh=mesh1, plan=nd, planner=planner, ndim=1)
+    ref = np.fft.fft(x, axis=-1)
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-4, spec
+    br, bi = api.ifftn((re, im), mesh=mesh1, plan=nd, planner=planner,
+                       ndim=1)
+    back = np.asarray(br) + 1j * np.asarray(bi)
+    assert np.max(np.abs(back - x)) < 1e-3, spec
+
+
+@pytest.mark.parametrize("shape,batch",
+                         [((8, 16), ()), ((10, 7), (2,)),
+                          ((6, 10, 9), (2,))])
+def test_fftn_transposed_layout_matrix(planner, mesh1, shape, batch):
+    """Planned transposed slab output: numpy-exact values, inverse without
+    the restore exchange, mixed radix and batch dims included."""
+    x = (RNG.standard_normal(batch + shape)
+         + 1j * RNG.standard_normal(batch + shape)).astype(np.complex64)
+    nd = api.plan_nd(shape, "c2c", mesh=mesh1, planner=planner,
+                     decomp="slab", axes=("fft",),
+                     output_layout="transposed")
+    assert nd.output_layout == "transposed"
+    re, im = api.fftn(x, mesh=mesh1, plan=nd, planner=planner,
+                      ndim=len(shape))
+    ref = np.fft.fftn(x, axes=tuple(range(-len(shape), 0)))
+    got = np.asarray(re) + 1j * np.asarray(im)
+    assert got.shape == ref.shape
+    assert np.max(np.abs(got - ref)) / np.max(np.abs(ref)) < 1e-4
+    br, bi = api.ifftn((re, im), mesh=mesh1, plan=nd, planner=planner,
+                       ndim=len(shape))
+    back = np.asarray(br) + 1j * np.asarray(bi)
+    assert np.max(np.abs(back - x)) < 1e-3
